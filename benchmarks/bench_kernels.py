@@ -1,0 +1,44 @@
+"""Kernel-level microbench: the embedding-join (support counting) hot
+path — ref (XLA) wall time per candidate at mining-realistic shapes, and
+interpret-mode parity spot check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import level_supports
+from repro.kernels.ref import embedding_join_ref
+
+from .common import row, timed
+
+
+def _inputs(C=64, P=16, G=256, M=32, K=6, T=24, F=24, seed=0):
+    rng = np.random.default_rng(seed)
+    pol = rng.integers(0, 32, (P, G, M, K)).astype(np.int32)
+    pmask = rng.random((P, G, M)) < 0.6
+    src = rng.integers(0, 32, (T, G, F)).astype(np.int32)
+    dst = rng.integers(0, 32, (T, G, F)).astype(np.int32)
+    emask = rng.random((T, G, F)) < 0.6
+    meta = np.stack([rng.integers(0, P, C), rng.integers(0, K, C),
+                     rng.integers(0, K, C), rng.integers(0, 2, C),
+                     rng.integers(0, T, C)], 1).astype(np.int32)
+    return tuple(map(jnp.asarray, (meta, pol, pmask, src, dst, emask)))
+
+
+def run() -> list[str]:
+    out = []
+    args = _inputs()
+    fn = jax.jit(lambda *a: level_supports(*a, backend="ref"))
+    fn(*args)[0].block_until_ready()        # compile
+    (sup, emb), secs = timed(lambda: jax.block_until_ready(fn(*args)))
+    C = args[0].shape[0]
+    out.append(row("kernels/embedding_join_ref(64cand,256graph)",
+                   secs, f"per_candidate_us={secs / C * 1e6:.1f}"))
+
+    # parity: interpret-mode Pallas vs ref on a slice
+    small = _inputs(C=4, G=16, M=8, K=4, T=4, F=8, seed=1)
+    s_ref, e_ref = level_supports(*small, backend="ref")
+    s_k, e_k = level_supports(*small, backend="interpret", tile_g=8,
+                              tile_c=4)
+    assert np.array_equal(np.asarray(s_ref), np.asarray(s_k))
+    out.append(row("kernels/pallas_interpret_parity", 0.0, "exact"))
+    return out

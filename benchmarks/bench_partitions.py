@@ -1,0 +1,18 @@
+"""Paper Fig. 20: runtime vs partition count — the paper's key systems
+finding: mapper cost is exponential in partition size, shuffle cost only
+linear, so partitions ≫ workers wins until key-space overhead bites."""
+from repro.core.graphdb import pubchem_like_db
+from repro.core.mining import Mirage, MirageConfig
+
+from .common import row, timed
+
+
+def run() -> list[str]:
+    graphs = pubchem_like_db(160, seed=5, avg_edges=11)
+    out = []
+    for parts in (2, 4, 8, 16, 32):
+        cfg = MirageConfig(minsup=0.20, n_partitions=parts, max_size=4)
+        res, secs = timed(Mirage(cfg).fit, graphs)
+        out.append(row(f"fig20/partitions={parts}", secs,
+                       f"frequent={sum(res.counts())}"))
+    return out

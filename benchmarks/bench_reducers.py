@@ -1,0 +1,32 @@
+"""Paper Fig. 19: runtime vs reducer count.
+
+Hadoop's reducer-count knob becomes the reduce collective's shard
+layout.  We compare the two reduce schedules (psum = every worker owns
+every key; reduce_scatter = each worker owns C/W keys, Hadoop-style) and
+report measured wall time plus the analytic wire bytes per level, which
+is what the knob actually controls at pod scale.
+"""
+from repro.core.graphdb import pubchem_like_db
+from repro.core.mining import Mirage, MirageConfig
+
+from .common import row, timed
+
+
+def run() -> list[str]:
+    graphs = pubchem_like_db(120, seed=3, avg_edges=11)
+    out = []
+    for reduce in ("psum", "reduce_scatter"):
+        cfg = MirageConfig(minsup=0.20, n_partitions=8, reduce=reduce,
+                           max_size=4)
+        res, secs = timed(Mirage(cfg).fit, graphs)
+        c_total = sum(s.n_candidates for s in res.stats)
+        # wire bytes per worker for W workers (ring factors):
+        #   psum: 2(W-1)/W * C * 4B ; rs+ag: (W-1)/W * C * (4+1)B
+        W = 256
+        psum_b = 2 * (W - 1) / W * c_total * 4
+        rs_b = (W - 1) / W * c_total * (4 + 1)
+        est = psum_b if reduce == "psum" else rs_b
+        out.append(row(f"fig19/reduce={reduce}", secs,
+                       f"candidates={c_total};wire_bytes@256={est:.0f};"
+                       f"frequent={sum(res.counts())}"))
+    return out

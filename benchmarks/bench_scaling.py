@@ -1,0 +1,56 @@
+"""Paper Fig. 18: runtime and speedup vs number of workers.
+
+Workers are simulated host devices (subprocess per count so jax re-inits
+with the right device pool).  The paper's Yeast/20% setup maps to the
+yeast-like dataset; speedup is reported relative to the smallest count.
+The absolute CPU numbers are not TPU predictions — the *shape* (near-
+linear until partition granularity binds) is the reproduction.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import row
+
+SNIPPET = textwrap.dedent("""
+    import os, sys, json, time
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + sys.argv[1])
+    import jax
+    from repro.core.graphdb import pubchem_like_db
+    from repro.core.mapreduce import MiningMesh
+    from repro.core.mining import Mirage, MirageConfig
+
+    w = int(sys.argv[1])
+    mesh = MiningMesh(jax.make_mesh((w,), ("data",),
+                      axis_types=(jax.sharding.AxisType.Auto,)))
+    graphs = pubchem_like_db(160, seed=0, avg_edges=11)
+    cfg = MirageConfig(minsup=0.20, n_partitions=16, max_size=4)
+    miner = Mirage(cfg, mesh)
+    t0 = time.perf_counter()
+    res = miner.fit(graphs)
+    print(json.dumps({"w": w, "secs": time.perf_counter() - t0,
+                      "frequent": sum(res.counts())}))
+""")
+
+
+def run() -> list[str]:
+    out = []
+    base = None
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    for w in (1, 2, 4, 8):
+        r = subprocess.run([sys.executable, "-c", SNIPPET, str(w)],
+                           capture_output=True, text=True, env=env,
+                           timeout=1800)
+        assert r.returncode == 0, r.stderr[-1500:]
+        d = json.loads(r.stdout.strip().splitlines()[-1])
+        if base is None:
+            base = d["secs"]
+        out.append(row(f"fig18/workers={w}", d["secs"],
+                       f"speedup={base / d['secs']:.2f}x"
+                       f";frequent={d['frequent']}"))
+    return out

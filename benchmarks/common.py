@@ -1,0 +1,15 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    """CSV contract: name,us_per_call,derived."""
+    return f"{name},{seconds * 1e6:.0f},{derived}"

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig17,table3]
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+"""
+import argparse
+import sys
+import traceback
+
+from . import (bench_dbsize, bench_kernels, bench_minsup, bench_naive,
+               bench_partitions, bench_reducers, bench_scaling,
+               bench_schemes)
+
+SUITES = {
+    "fig17_minsup": bench_minsup,
+    "table2_dbsize": bench_dbsize,
+    "fig18_scaling": bench_scaling,
+    "fig19_reducers": bench_reducers,
+    "fig20_partitions": bench_partitions,
+    "table4_schemes": bench_schemes,
+    "table3_naive": bench_naive,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite-name substrings")
+    args = ap.parse_args()
+    picks = [s for s in args.only.split(",") if s]
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in SUITES.items():
+        if picks and not any(p in name for p in picks):
+            continue
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

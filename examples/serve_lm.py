@@ -1,0 +1,70 @@
+"""Serving example: batched prefill + decode with a KV cache, greedy
+sampling, for any assigned arch (reduced config).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2.5-14b
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import build, get_smoke_config
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2.5-14b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=16)
+ap.add_argument("--gen-len", type=int, default=24)
+args = ap.parse_args()
+
+cfg = get_smoke_config(args.arch)
+fns = build(cfg)
+params = fns["init"](jax.random.key(0))
+rng = np.random.default_rng(0)
+
+B, P, G = args.batch, args.prompt_len, args.gen_len
+prompts = rng.integers(1, cfg.vocab, (B, P))
+
+batch = {"tokens": jnp.asarray(prompts)}
+if cfg.family == "vlm":
+    batch = {"embeds": jnp.asarray(rng.normal(size=(B, P, cfg.d_model))
+                                   .astype(np.float32) * 0.02),
+             "positions3": jnp.broadcast_to(jnp.arange(P)[None, None],
+                                            (3, B, P)).astype(jnp.int32)}
+if cfg.family in ("audio", "encdec"):
+    batch["frames"] = jnp.asarray(
+        rng.normal(size=(B, cfg.encoder_frames, cfg.d_model))
+        .astype(np.float32) * 0.02)
+
+print(f"=== prefill {B}x{P} on {cfg.name} (reduced) ===")
+logits, cache = jax.jit(fns["prefill"])(params, batch)
+
+# widen kv caches to hold the generated tokens
+def grow(x):
+    if x.ndim >= 3 and x.shape[2] == P:
+        pad = [(0, 0)] * x.ndim
+        pad[2] = (0, G)
+        return jnp.pad(x, pad)
+    return x
+
+cache = jax.tree_util.tree_map(grow, cache)
+decode = jax.jit(fns["decode"])
+
+tok = jnp.argmax(logits[:, -1], axis=-1)
+out_tokens = [np.asarray(tok)]
+for t in range(G - 1):
+    step_batch = {"tokens": tok[:, None]}
+    if cfg.family == "vlm":
+        step_batch = {
+            "embeds": jnp.zeros((B, 1, cfg.d_model), jnp.float32),
+            "positions3": jnp.full((3, B, 1), P + t, jnp.int32)}
+    logits, cache = decode(params, cache, step_batch, jnp.int32(P + t))
+    tok = jnp.argmax(logits[:, -1], axis=-1)
+    out_tokens.append(np.asarray(tok))
+
+gen = np.stack(out_tokens, axis=1)
+print(f"greedy generations (token ids), shape {gen.shape}:")
+for b in range(B):
+    print(f"  req {b}: {prompts[b][-4:].tolist()} -> {gen[b][:12].tolist()}")
+print("serving pipeline OK (prefill -> cached decode x%d)" % (G - 1))

@@ -1,0 +1,4 @@
+"""MIRAGE-on-JAX: iterative Map/Reduce frequent subgraph mining as a
+multi-pod TPU framework.  See README.md / DESIGN.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,17 @@
+"""MIRAGE core: the paper's algorithm (host-exact + distributed)."""
+from .candgen import Candidate, EdgeAlphabet, generate_candidates
+from .dfscode import Code, is_canonical, min_dfs_code, rightmost_path
+from .graphdb import Graph, paper_toy_db, pubchem_like_db, random_db
+from .host_miner import mine_host
+from .mapreduce import MiningMesh
+from .mining import DistMiningResult, Mirage, MirageConfig
+from .naive import mine_naive
+from .partition import make_partitions
+
+__all__ = [
+    "Candidate", "EdgeAlphabet", "generate_candidates", "Code",
+    "is_canonical", "min_dfs_code", "rightmost_path", "Graph",
+    "paper_toy_db", "pubchem_like_db", "random_db", "mine_host",
+    "MiningMesh", "DistMiningResult", "Mirage", "MirageConfig",
+    "mine_naive", "make_partitions",
+]

@@ -1,0 +1,132 @@
+"""Rightmost-path candidate generation (paper §IV-A.1).
+
+Iteration k turns each frequent size-k pattern into size-(k+1) candidates
+by adjoining one frequent edge:
+
+  * **forward edge** — from any vertex on the rightmost path (RMP) to a
+    brand-new vertex, which receives the next DFS id;
+  * **back edge** — from the rightmost vertex (RMV) to another RMP vertex,
+    provided the edge does not already exist (no multigraphs — paper
+    Fig. 4 discussion).
+
+The adjoined edge's label triple must belong to the globally frequent
+edge alphabet (``F_1``), the Apriori prune.  Every candidate then passes
+the min-dfs-code canonicality test (`dfscode.is_canonical`): of all
+generation paths of a pattern exactly one survives, so the candidate
+space is duplicate-free (completeness + no recount).
+
+Candidates are *metadata* (host-side, tiny).  Each carries the join recipe
+(`Extension`) the device layer executes against partition-local occurrence
+lists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from .dfscode import Code, Edge5, code_to_graph, is_canonical, rightmost_path
+
+__all__ = ["Extension", "Candidate", "EdgeAlphabet", "generate_candidates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Extension:
+    """Join recipe for the device layer.
+
+    forward:  child_emb = parent_emb + [v]  for edge occurrences (u, v) of
+              ``triple`` with u == parent_emb[stub] and v not in parent_emb
+    backward: child_emb = parent_emb        if an occurrence (u, v) of
+              ``triple`` has u == parent_emb[stub] and v == parent_emb[to]
+    """
+
+    forward: bool
+    stub: int            # dfs id of the existing attachment vertex
+    to: int              # dfs id of other endpoint (new id if forward)
+    triple: tuple[int, int, int]  # (l_stub, l_edge, l_other)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    code: Code           # parent code + one edge (already canonical)
+    parent: int          # index into F_k
+    ext: Extension
+
+    @property
+    def size(self) -> int:
+        return len(self.code)
+
+
+class EdgeAlphabet:
+    """Globally frequent single-edge label triples (= F_1 keys).
+
+    Stored symmetrically: ``(a, e, b)`` present iff ``(b, e, a)`` present.
+    The *canonical* triple has ``a <= b``.
+    """
+
+    def __init__(self, triples: Iterable[tuple[int, int, int]]):
+        s = set()
+        for (a, e, b) in triples:
+            s.add((int(a), int(e), int(b)))
+            s.add((int(b), int(e), int(a)))
+        self._set = frozenset(s)
+        self.vlabels = sorted({a for (a, _, _) in s})
+        self.elabels = sorted({e for (_, e, _) in s})
+
+    def __contains__(self, triple: tuple[int, int, int]) -> bool:
+        return tuple(int(x) for x in triple) in self._set
+
+    def __len__(self) -> int:
+        return len(self._set)
+
+    def canonical(self) -> list[tuple[int, int, int]]:
+        return sorted(t for t in self._set if t[0] <= t[2])
+
+    def partners(self, label: int) -> list[tuple[int, int]]:
+        """All (edge_label, other_vertex_label) adjoinable to ``label``."""
+        return sorted({(e, b) for (a, e, b) in self._set if a == label})
+
+
+def generate_candidates(
+    frequent: Sequence[Code],
+    alphabet: EdgeAlphabet,
+) -> list[Candidate]:
+    """All canonical size-(k+1) candidates from the frequent size-k set.
+
+    Host-side cost is O(|F_k| · RMP · alphabet) plus one canonicality check
+    per raw candidate — pattern-metadata scale, negligible next to
+    support counting (the device side).
+    """
+    out: list[Candidate] = []
+    for pidx, code in enumerate(frequent):
+        g = code_to_graph(code)
+        rmp = rightmost_path(code)
+        rmv = rmp[-1]
+        existing = {(min(int(u), int(v)), max(int(u), int(v)))
+                    for (u, v) in g.edges}
+        vl = g.vlabels
+        n_v = g.n_vertices
+
+        # ---- back edges: RMV -> strict-ancestor RMP vertex
+        for w in rmp[:-1]:
+            if (min(rmv, w), max(rmv, w)) in existing:
+                continue  # would duplicate an edge (multigraph) — skip
+            for (e_lab, other) in alphabet.partners(int(vl[rmv])):
+                if other != int(vl[w]):
+                    continue
+                edge: Edge5 = (rmv, w, int(vl[rmv]), e_lab, int(vl[w]))
+                child = code + (edge,)
+                if is_canonical(child):
+                    out.append(Candidate(child, pidx,
+                                         Extension(False, rmv, w,
+                                                   (int(vl[rmv]), e_lab, int(vl[w])))))
+
+        # ---- forward edges: any RMP vertex -> new vertex (id = n_v)
+        for w in rmp:
+            for (e_lab, other) in alphabet.partners(int(vl[w])):
+                edge = (int(w), n_v, int(vl[w]), e_lab, other)
+                child = code + (edge,)
+                if is_canonical(child):
+                    out.append(Candidate(child, pidx,
+                                         Extension(True, int(w), n_v,
+                                                   (int(vl[w]), e_lab, other))))
+    return out

@@ -1,0 +1,261 @@
+"""Dense occurrence-list (OL) algebra — the device-side data plane.
+
+MIRAGE's support counting is OL intersection (paper §IV-A.3, Fig. 6): the
+child pattern's embeddings are the parent's embeddings joined with the
+adjoined edge's occurrences.  Hadoop-MIRAGE does this in Java per mapper;
+here it becomes fixed-shape masked tensor ops so a partition's whole
+level-k state lives on a TPU core and the join runs on the VPU
+(`kernels/embedding_join.py` is the tiled version; this module is the
+pure-jnp reference/oracle and the shape contract).
+
+Dense shapes for one partition (G graphs padded):
+
+  edge-OL   : src/dst (T, G, F) int32 + mask (T, G, F) bool
+              T = directed frequent label triples, F = max occ/graph
+  level-k OL: ol (P, G, M, K) int32 + mask (P, G, M) bool
+              P = |F_k| patterns, M = max embeddings/graph,
+              K = k+1 (vertex-count pad; unused slots are -1)
+  candidates: meta (C, 5) int32 rows [parent, stub, to, fwd, triple_idx]
+
+Two-pass level execution (a beyond-paper optimization — Hadoop MIRAGE
+materializes and *ships* OLs for every locally-non-zero candidate; we
+materialize survivors only, locally):
+
+  pass 1  local_supports()   -> (C,) per-graph-any popcount   [hot path]
+  pass 2  materialize_ol()   -> compacted child OLs for frequent c only
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .candgen import Candidate
+from .dfscode import Code
+from .graphdb import Graph
+from .host_miner import OccurrenceList
+
+__all__ = [
+    "EdgeOL", "LevelOL", "CandidateMeta",
+    "build_edge_ol", "level1_ol", "candidate_meta",
+    "join_valid", "local_supports_ref", "materialize_ol",
+]
+
+PAD = -1
+
+
+@dataclasses.dataclass
+class EdgeOL:
+    """Partition-static directed edge occurrence lists (paper Fig. 12b)."""
+
+    triples: np.ndarray    # (T, 3) int32 — the directed label-triple table
+    src: np.ndarray        # (T, G, F) int32
+    dst: np.ndarray        # (T, G, F) int32
+    mask: np.ndarray       # (T, G, F) bool
+    triple_index: dict[tuple[int, int, int], int]
+
+    @property
+    def shape(self):
+        return self.src.shape
+
+
+@dataclasses.dataclass
+class LevelOL:
+    """Stacked OLs for all frequent patterns of one level."""
+
+    ol: jnp.ndarray        # (P, G, M, K) int32, PAD-filled
+    mask: jnp.ndarray      # (P, G, M) bool
+
+    @property
+    def P(self):
+        return self.ol.shape[0]
+
+
+def build_edge_ol(
+    graphs: Sequence[Graph],
+    triples: Sequence[tuple[int, int, int]],
+    *,
+    pad_graphs: int | None = None,
+    max_occ: int | None = None,
+) -> EdgeOL:
+    """Preparation-phase construction (host, once per partition).
+
+    ``triples`` must be the *directed* closure of the frequent-edge
+    alphabet so every partition indexes the same table (the shared key
+    space that replaces Hadoop's shuffle-by-string-key).
+    """
+    tindex = {tuple(t): i for i, t in enumerate(triples)}
+    G = pad_graphs or len(graphs)
+    occs: list[list[list[tuple[int, int]]]] = [
+        [[] for _ in range(G)] for _ in range(len(triples))]
+    for gi, g in enumerate(graphs):
+        for (u, v), el in zip(g.edges, g.elabels):
+            lu, lv = int(g.vlabels[u]), int(g.vlabels[v])
+            for (a, la, b, lb) in ((int(u), lu, int(v), lv),
+                                   (int(v), lv, int(u), lu)):
+                ti = tindex.get((la, int(el), lb))
+                if ti is not None:
+                    occs[ti][gi].append((a, b))
+    F = max_occ or max((len(o) for row in occs for o in row), default=1)
+    F = max(F, 1)
+    T = len(triples)
+    src = np.full((T, G, F), PAD, np.int32)
+    dst = np.full((T, G, F), PAD, np.int32)
+    mask = np.zeros((T, G, F), bool)
+    for ti in range(T):
+        for gi in range(G):
+            o = occs[ti][gi][:F]
+            if o:
+                src[ti, gi, : len(o)] = [p[0] for p in o]
+                dst[ti, gi, : len(o)] = [p[1] for p in o]
+                mask[ti, gi, : len(o)] = True
+    return EdgeOL(np.asarray(triples, np.int32), src, dst, mask, tindex)
+
+
+def level1_ol(
+    codes: Sequence[Code],
+    eol: EdgeOL,
+    *,
+    max_embeddings: int,
+) -> LevelOL:
+    """F_1 OLs from the edge-OL (preparation phase's emitted patterns).
+
+    A single-edge pattern (0,1,a,e,b) embeds at every directed occurrence
+    of (a,e,b); when a == b the two orientations are distinct embeddings
+    and already both present in the directed edge-OL.
+    """
+    P, M = len(codes), max_embeddings
+    _, G, F = eol.src.shape
+    ol = np.full((P, G, M, 2), PAD, np.int32)
+    mask = np.zeros((P, G, M), bool)
+    for pi, code in enumerate(codes):
+        (i, j, a, e, b) = code[0]
+        ti = eol.triple_index[(a, e, b)]
+        take = min(M, F)
+        ol[pi, :, :take, 0] = eol.src[ti, :, :take]
+        ol[pi, :, :take, 1] = eol.dst[ti, :, :take]
+        mask[pi, :, :take] = eol.mask[ti, :, :take]
+    return LevelOL(jnp.asarray(ol), jnp.asarray(mask))
+
+
+def candidate_meta(cands: Sequence[Candidate], eol: EdgeOL) -> np.ndarray:
+    """(C, 5) int32: [parent, stub, to, fwd, triple_idx]."""
+    rows = []
+    for c in cands:
+        rows.append([c.parent, c.ext.stub, c.ext.to, int(c.ext.forward),
+                     eol.triple_index[c.ext.triple]])
+    return np.asarray(rows, np.int32).reshape(-1, 5)
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jnp) join — semantics oracle for the Pallas kernel
+# ---------------------------------------------------------------------------
+
+def join_valid(
+    parent_ol: jnp.ndarray,   # (G, M, K)
+    parent_mask: jnp.ndarray,  # (G, M)
+    src: jnp.ndarray,          # (G, F)
+    dst: jnp.ndarray,          # (G, F)
+    emask: jnp.ndarray,        # (G, F)
+    stub: jnp.ndarray,         # () int32
+    to: jnp.ndarray,           # () int32
+    forward: jnp.ndarray,      # () int32 (0/1)
+) -> jnp.ndarray:
+    """Valid-match mask (G, M, F): parent embedding m ⋈ edge occurrence f."""
+    K = parent_ol.shape[-1]
+    onehot = (jnp.arange(K) == stub).astype(parent_ol.dtype)
+    stub_vals = (parent_ol * onehot).sum(-1)          # (G, M)
+    hit = (src[:, None, :] == stub_vals[:, :, None])  # (G, M, F)
+    hit &= parent_mask[:, :, None] & emask[:, None, :]
+
+    # forward: new endpoint must not already be in the embedding
+    member = (dst[:, None, :, None] == parent_ol[:, :, None, :]).any(-1)
+    fwd_ok = ~member
+    # backward: other endpoint must be exactly embedding[to]
+    onehot_to = (jnp.arange(K) == to).astype(parent_ol.dtype)
+    to_vals = (parent_ol * onehot_to).sum(-1)          # (G, M)
+    bwd_ok = dst[:, None, :] == to_vals[:, :, None]
+    return hit & jnp.where(forward.astype(bool), fwd_ok, bwd_ok)
+
+
+def local_supports_ref(
+    level: LevelOL,
+    eol_src: jnp.ndarray, eol_dst: jnp.ndarray, eol_mask: jnp.ndarray,
+    meta: jnp.ndarray,     # (C, 5)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-candidate local support (#graphs with >=1 match) and total
+    embedding count (the straggler-rebalance cost signal).  Pure jnp.
+    """
+    def one(cand):
+        parent, stub, to, fwd, tidx = cand[0], cand[1], cand[2], cand[3], cand[4]
+        pol = jnp.take(level.ol, parent, axis=0)        # (G, M, K)
+        pmask = jnp.take(level.mask, parent, axis=0)    # (G, M)
+        src = jnp.take(eol_src, tidx, axis=0)           # (G, F)
+        dst = jnp.take(eol_dst, tidx, axis=0)
+        em = jnp.take(eol_mask, tidx, axis=0)
+        valid = join_valid(pol, pmask, src, dst, em, stub, to, fwd)
+        per_graph = valid.any(axis=(1, 2))
+        return per_graph.sum(dtype=jnp.int32), valid.sum(dtype=jnp.int32)
+
+    sup, cnt = jax.lax.map(one, meta)
+    return sup, cnt
+
+
+def materialize_ol(
+    level: LevelOL,
+    eol_src: jnp.ndarray, eol_dst: jnp.ndarray, eol_mask: jnp.ndarray,
+    meta: jnp.ndarray,          # (C', 5) — surviving candidates only
+    *,
+    max_embeddings: int,
+) -> tuple[LevelOL, jnp.ndarray]:
+    """Compacted child OLs for the surviving candidates (pass 2).
+
+    Returns the next LevelOL (K+1 vertex slots) and the per-candidate
+    overflow count (matches dropped by the M cap — exactness telemetry).
+    """
+    G, M, K = level.ol.shape[1:]
+    F = eol_src.shape[-1]
+    Mc = max_embeddings
+
+    def one(cand):
+        parent, stub, to, fwd, tidx = cand[0], cand[1], cand[2], cand[3], cand[4]
+        pol = jnp.take(level.ol, parent, axis=0)
+        pmask = jnp.take(level.mask, parent, axis=0)
+        src = jnp.take(eol_src, tidx, axis=0)
+        dst = jnp.take(eol_dst, tidx, axis=0)
+        em = jnp.take(eol_mask, tidx, axis=0)
+        valid = join_valid(pol, pmask, src, dst, em, stub, to, fwd)  # (G,M,F)
+
+        # child embedding (m, f): parent row m extended by dst[f] (forward)
+        # or unchanged (backward).  Backward duplicates (same m, several f)
+        # are collapsed to the first f per m.
+        first_f = (jnp.cumsum(valid, axis=-1) == 1) & valid
+        vsel = jnp.where(fwd.astype(bool), valid, first_f)           # (G,M,F)
+
+        flat = vsel.reshape(G, M * F)
+        # stable compaction: order valid entries first
+        order = jnp.argsort(~flat, axis=-1, stable=True)[:, :Mc]     # (G,Mc)
+        picked = jnp.take_along_axis(flat, order, axis=-1)           # (G,Mc)
+        m_idx, f_idx = order // F, order % F
+
+        par_rows = jnp.take_along_axis(
+            pol, m_idx[:, :, None], axis=1)                          # (G,Mc,K)
+        new_v = jnp.take_along_axis(dst, f_idx, axis=-1)             # (G,Mc)
+        # Pad to K+1 slots, then scatter the new vertex at its DFS id
+        # (= ext.to for forward edges; patterns with back edges have
+        # n_v < K so the write position is NOT necessarily the last slot).
+        child = jnp.concatenate(
+            [par_rows, jnp.full_like(par_rows[:, :, :1], PAD)], axis=-1)
+        slot = jnp.arange(K + 1) == to                               # (K+1,)
+        child = jnp.where(slot[None, None, :] & fwd.astype(bool),
+                          new_v[:, :, None], child)                  # (G,Mc,K+1)
+        child = jnp.where(picked[:, :, None], child, PAD)
+        overflow = (vsel.sum(dtype=jnp.int32)
+                    - picked.sum(dtype=jnp.int32))
+        return child.astype(jnp.int32), picked, overflow
+
+    child, mask, over = jax.lax.map(one, meta)
+    return LevelOL(child, mask), over

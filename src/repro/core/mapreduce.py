@@ -1,0 +1,192 @@
+"""Map / shuffle / reduce phases of MIRAGE as shard_map SPMD programs.
+
+One MIRAGE iteration (paper Figs. 7-9) becomes, on a TPU mesh:
+
+  map     — per-device, per-local-partition: fused embedding-join kernel
+            over all candidates (kernels/ops.level_supports), summed over
+            the device's partitions.  Zero communication: computation
+            lives where the data lives.
+  shuffle — the dense-key exchange that replaces Hadoop's sort/shuffle:
+            the candidate axis is the key space (all devices enumerate the
+            identical canonical candidate list), so aggregation is ONE
+            collective over a dense int vector:
+              * ``psum``            — baseline (paper-faithful reduce)
+              * ``reduce_scatter``  — optimized: psum_scatter the support
+                vector so each device owns C/W keys (exactly Hadoop's
+                "reducer owns a key range"), threshold locally, and
+                all_gather the 1-byte verdicts + supports.
+  reduce  — threshold + the survivors' child-OL materialization, again
+            data-local per partition (pass 2; survivors only).
+
+Why this is the right TPU translation (DESIGN.md §2): a string-keyed
+shuffle is a sparse all-to-all — poison on ICI; a dense psum/
+reduce-scatter over an agreed key ordering is line-rate.  Agreement costs
+nothing because candidate enumeration is deterministic given F_k, which
+is globally known at the end of iteration k-1 (the same invariant that
+lets Hadoop-MIRAGE read F_k from HDFS).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels.ops import Backend, level_supports
+from .embedding import materialize_ol, LevelOL
+
+__all__ = ["MiningMesh", "map_reduce_supports", "map_materialize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningMesh:
+    """A (possibly multi-axis) mesh with all axes used as workers.
+
+    The paper's "worker" view is 1-D; on a pod the physical mesh is 2-D/3-D
+    (("pod",)"data","model").  Mining flattens every axis into the worker
+    pool — collectives take the axis-name tuple directly.
+    """
+
+    mesh: Mesh
+
+    @property
+    def axes(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def n_workers(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+    def spec_parts(self) -> P:
+        """Partition-major arrays: shard dim 0 over every mesh axis."""
+        return P(self.axes)
+
+    def replicated(self) -> P:
+        return P()
+
+    @staticmethod
+    def single_device() -> "MiningMesh":
+        mesh = jax.make_mesh(
+            (1,), ("w",),
+            axis_types=(jax.sharding.AxisType.Auto,))
+        return MiningMesh(mesh)
+
+
+def _local_supports_fn(meta, pol, pmask, src, dst, emask, *, backend):
+    """Map phase on one device: vmap the fused join over local partitions.
+
+    Shapes (device-local): pol (PP, P, G, M, K), eol (PP, T, G, F).
+    Returns (C,) local support and (C,) embed-count cost signal, plus the
+    per-partition embed counts (PP, C) for the straggler rebalancer.
+    """
+    sup_pp, emb_pp = jax.vmap(
+        lambda a, b, c, d, e: level_supports(
+            meta, a, b, c, d, e, backend=backend)
+    )(pol, pmask, src, dst, emask)
+    return sup_pp.sum(0), emb_pp.sum(0), emb_pp
+
+
+@functools.lru_cache(maxsize=64)
+def _support_program(mmesh: MiningMesh, minsup: int,
+                     backend: Optional[Backend], reduce: str):
+    """Build (once per static config) the jitted SPMD support round —
+    per-level shape changes then hit jit's own cache, not a rebuild."""
+    axes = mmesh.axes
+    parts = mmesh.spec_parts()
+    rep = mmesh.replicated()
+
+    def program(meta, pol, pmask, src, dst, emask):
+        local_sup, _local_emb, emb_pp = _local_supports_fn(
+            meta, pol, pmask, src, dst, emask, backend=backend)
+        if reduce == "psum":
+            gsup = jax.lax.psum(local_sup, axes)                  # (C,)
+            verdict = (gsup >= minsup).astype(jnp.int8)
+        elif reduce == "reduce_scatter":
+            # each worker owns a contiguous key shard (C/W keys) —
+            # Hadoop's "reducer owns a key range", as one collective.
+            # Only the 1-byte verdicts are all-gathered; the f32 support
+            # counts stay SHARDED on device (the host reassembles them
+            # lazily when reading the output array).  Wire per key:
+            # (4+1)·(W-1)/W bytes vs psum's 8·(W-1)/W.
+            gsup = jax.lax.psum_scatter(
+                local_sup, axes, scatter_dimension=0, tiled=True)  # (C/W,)
+            v_shard = (gsup >= minsup).astype(jnp.int8)
+            verdict = jax.lax.all_gather(v_shard, axes, axis=0, tiled=True)
+        else:
+            raise ValueError(f"unknown reduce {reduce!r}")
+        return gsup, verdict, emb_pp
+
+    sup_spec = rep if reduce == "psum" else parts
+    # check_vma=False: the varying-axis checker cannot see that a tiled
+    # all_gather output is device-invariant; semantics are unchanged.
+    return jax.jit(jax.shard_map(
+        program, mesh=mmesh.mesh,
+        in_specs=(rep, parts, parts, parts, parts, parts),
+        out_specs=(sup_spec, rep, parts), check_vma=False))
+
+
+def map_reduce_supports(
+    mmesh: MiningMesh,
+    meta: jnp.ndarray,        # (C, 5) replicated
+    pol: jnp.ndarray,         # (NP, P, G, M, K) sharded dim0
+    pmask: jnp.ndarray,       # (NP, P, G, M)
+    src: jnp.ndarray,         # (NP, T, G, F)
+    dst: jnp.ndarray,
+    emask: jnp.ndarray,
+    *,
+    minsup: int,
+    backend: Optional[Backend] = None,
+    reduce: str = "psum",
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One full map+shuffle+reduce support round.
+
+    Returns (global_support (C,), frequent_verdict (C,), per-partition
+    embed counts (NP, C)) as host numpy.  C must be padded to a multiple
+    of the worker count for the reduce_scatter variant (mining.py pads).
+    """
+    fn = _support_program(mmesh, minsup, backend, reduce)
+    gsup, verdict, emb_pp = fn(meta, pol, pmask, src, dst, emask)
+    return (np.asarray(gsup), np.asarray(verdict), np.asarray(emb_pp))
+
+
+@functools.lru_cache(maxsize=64)
+def _materialize_program(mmesh: MiningMesh, max_embeddings: int):
+    axes = mmesh.axes
+    parts = mmesh.spec_parts()
+    rep = mmesh.replicated()
+
+    def program(meta, pol, pmask, src, dst, emask):
+        def per_part(po, pm, s, d, e):
+            lvl, over = materialize_ol(
+                LevelOL(po, pm), s, d, e, meta,
+                max_embeddings=max_embeddings)
+            return lvl.ol, lvl.mask, over.sum()
+        ol, mask, over = jax.vmap(per_part)(pol, pmask, src, dst, emask)
+        return ol, mask, jax.lax.psum(over.sum(), axes)
+
+    return jax.jit(jax.shard_map(
+        program, mesh=mmesh.mesh,
+        in_specs=(rep, parts, parts, parts, parts, parts),
+        out_specs=(parts, parts, rep)))
+
+
+def map_materialize(
+    mmesh: MiningMesh,
+    keep_meta: jnp.ndarray,   # (C', 5) replicated — surviving candidates
+    pol: jnp.ndarray,         # (NP, P, G, M, K)
+    pmask: jnp.ndarray,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    emask: jnp.ndarray,
+    *,
+    max_embeddings: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Pass 2: build next level's OL store for survivors (data-local; the
+    only collective is the overflow-telemetry psum)."""
+    fn = _materialize_program(mmesh, max_embeddings)
+    ol, mask, overflow = fn(keep_meta, pol, pmask, src, dst, emask)
+    return ol, mask, int(np.asarray(overflow))

@@ -1,0 +1,308 @@
+"""MIRAGE iterative mining driver (paper §IV-B/C, Figs. 9-10).
+
+Phases:
+  1. data partition  — filter infrequent edges, split into NP partitions
+                       (NP ≫ workers, paper Fig. 20), pad uniformly;
+  2. preparation     — per-partition static structures (edge-OL,
+                       edge-extension map is implied by the triple table)
+                       + the level-1 pattern OLs;
+  3. mining          — host enumerates canonical candidates from F_k
+                       (tiny metadata), devices run the fused join
+                       (map), one dense collective aggregates support
+                       (shuffle+reduce), survivors' OLs materialize
+                       data-locally; repeat until no frequent patterns.
+
+Fault tolerance: every level boundary checkpoints the complete mining
+state (codes + OL store + cursor) atomically — the HDFS write of the
+paper made explicit.  ``Mirage.fit(..., resume=True)`` replays at most
+one level after any failure, and may resume onto a *different* mesh
+(elastic: state is saved unsharded, resharded on load).
+
+Straggler mitigation: the join kernel's embed-count output is an exact
+per-partition cost signal for the *next* level; when predicted imbalance
+exceeds a threshold the partition→device assignment is re-packed (LPT)
+and the OL store re-laid-out (one all-to-all-equivalent gather).  This is
+deterministic load balancing, replacing Hadoop's speculative execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ops import Backend
+from ..runtime import checkpoint as ckpt
+from .candgen import Candidate, EdgeAlphabet, generate_candidates
+from .dfscode import Code, array_to_code, code_to_array
+from .embedding import build_edge_ol, candidate_meta, level1_ol
+from .graphdb import Graph
+from .mapreduce import MiningMesh, map_materialize, map_reduce_supports
+from .partition import make_partitions
+
+__all__ = ["MirageConfig", "LevelStats", "DistMiningResult", "Mirage"]
+
+
+@dataclasses.dataclass
+class MirageConfig:
+    minsup: float | int                 # fraction of |G| or absolute count
+    n_partitions: int = 8
+    scheme: int = 2                     # paper partition scheme (1|2)
+    max_size: Optional[int] = None      # max pattern edges (None = to fixpoint)
+    max_embeddings: int = 32            # M cap (exactness valve escalates)
+    max_embeddings_limit: int = 512     # escalation ceiling
+    max_occ: Optional[int] = None       # F pad (None = derive from data)
+    backend: Optional[Backend] = None   # kernels backend (None = auto)
+    reduce: str = "psum"                # "psum" | "reduce_scatter"
+    checkpoint_dir: Optional[str] = None
+    escalate_on_overflow: bool = True
+    rebalance_threshold: float = 1.25   # max/mean partition cost trigger
+    rebalance: bool = True
+
+
+@dataclasses.dataclass
+class LevelStats:
+    level: int
+    n_candidates: int
+    n_frequent: int
+    overflow: int
+    seconds: float
+    map_seconds: float
+    rebalanced: bool
+    imbalance: float                    # max/mean partition embed-count
+
+
+@dataclasses.dataclass
+class DistMiningResult:
+    levels: list[list[Code]]
+    supports: dict[Code, int]
+    stats: list[LevelStats]
+    alphabet: EdgeAlphabet
+    minsup: int
+    total_overflow: int
+
+    @property
+    def frequent(self) -> dict[Code, int]:
+        return self.supports
+
+    def counts(self) -> list[int]:
+        return [len(l) for l in self.levels]
+
+
+class Mirage:
+    """The distributed miner.  ``mesh=None`` uses a single-device mesh
+    (tests/CPU); production passes ``MiningMesh(make_production_mesh())``.
+    """
+
+    def __init__(self, config: MirageConfig,
+                 mesh: Optional[MiningMesh] = None):
+        self.cfg = config
+        self.mesh = mesh or MiningMesh.single_device()
+        if config.n_partitions % self.mesh.n_workers:
+            raise ValueError(
+                f"n_partitions={config.n_partitions} must be a multiple of "
+                f"the worker count {self.mesh.n_workers}")
+
+    # ------------------------------------------------------------------
+    def fit(self, graphs: Sequence[Graph], *, resume: bool = False
+            ) -> DistMiningResult:
+        cfg = self.cfg
+        t_all = time.perf_counter()
+
+        # ---- phase 1: partition (host) --------------------------------
+        part = make_partitions(graphs, cfg.minsup, cfg.n_partitions,
+                               scheme=cfg.scheme)
+        alphabet, minsup = part.alphabet, part.minsup
+        triples = sorted({t for c in alphabet.canonical()
+                          for t in (c, (c[2], c[1], c[0]))})
+        if not triples:
+            return DistMiningResult([], {}, [], alphabet, minsup, 0)
+
+        # ---- phase 2: preparation (host, once) -------------------------
+        G = max((len(p) for p in part.partitions), default=1)
+        eols = [build_edge_ol(p, triples, pad_graphs=G, max_occ=cfg.max_occ)
+                for p in part.partitions]
+        F = max(e.src.shape[-1] for e in eols)
+        src = np.stack([_pad_f(e.src, F, -1) for e in eols])       # (NP,T,G,F)
+        dst = np.stack([_pad_f(e.dst, F, -1) for e in eols])
+        emask = np.stack([_pad_f(e.mask, F, False) for e in eols])
+        eol0 = eols[0]   # triple_index identical across partitions
+
+        codes = [((0, 1, a, e, b),) for (a, e, b) in alphabet.canonical()]
+        # level-1 embeddings/graph are bounded by F (the edge-OL width), so
+        # M1 = F is exact by construction — no silent truncation at level 1.
+        lvl1 = [level1_ol(codes, e, max_embeddings=max(cfg.max_embeddings, F))
+                for e in eols]
+        pol = np.stack([np.asarray(l.ol) for l in lvl1])           # (NP,P,G,M,2)
+        pmask = np.stack([np.asarray(l.mask) for l in lvl1])
+
+        supports: dict[Code, int] = {}
+        for pi, c in enumerate(codes):
+            ti = eol0.triple_index[c[0][2:]]
+            supports[c] = int(emask[:, ti].any(axis=-1).sum())
+        levels: list[list[Code]] = [list(codes)]
+        stats: list[LevelStats] = []
+        total_overflow = 0
+        start_level = 1
+        M = cfg.max_embeddings
+
+        # ---- resume (elastic: mesh may differ from writer's) ----------
+        if resume and cfg.checkpoint_dir and ckpt.latest_step(cfg.checkpoint_dir):
+            state, meta_d = ckpt.load_step(cfg.checkpoint_dir)
+            levels = [[array_to_code(a) for a in lvl] for lvl in state["levels"]]
+            supports = {array_to_code(a): int(s) for a, s in
+                        zip(state["support_codes"], state["support_vals"])}
+            pol, pmask = state["pol"], state["pmask"]
+            start_level = int(meta_d["step"])
+            M = int(state["max_embeddings"])
+            total_overflow = int(state["total_overflow"])
+
+        pol, pmask, src_d, dst_d, emask_d = self._device_put(
+            pol, pmask, src, dst, emask)
+
+        # cumulative partition permutation from straggler rebalancing;
+        # checkpoints always store the OL store in CANONICAL order so a
+        # resumed run (which rebuilds edge-OLs canonically) stays aligned
+        order = np.arange(cfg.n_partitions)
+
+        # ---- phase 3: iterative mining ---------------------------------
+        k = start_level
+        while cfg.max_size is None or k < cfg.max_size:
+            t0 = time.perf_counter()
+            cands = generate_candidates(levels[-1], alphabet)
+            if not cands:
+                break
+            meta = candidate_meta(cands, eol0)
+            C = meta.shape[0]
+            Cp = _round_up(C, self.mesh.n_workers)
+            meta_p = np.concatenate(
+                [meta, np.tile([[0, 0, 0, 1, 0]], (Cp - C, 1))]).astype(np.int32)
+
+            t_map = time.perf_counter()
+            gsup, verdict, emb_pp = map_reduce_supports(
+                self.mesh, jnp.asarray(meta_p), pol, pmask,
+                src_d, dst_d, emask_d,
+                minsup=minsup, backend=cfg.backend, reduce=cfg.reduce)
+            map_secs = time.perf_counter() - t_map
+
+            keep = [i for i in range(C) if verdict[i]]
+            if not keep:
+                stats.append(LevelStats(k + 1, C, 0, 0,
+                                        time.perf_counter() - t0, map_secs,
+                                        False, 1.0))
+                break
+
+            keep_meta = jnp.asarray(meta[keep])
+            pol, pmask, overflow, M = self._materialize_exact(
+                keep_meta, pol, pmask, src_d, dst_d, emask_d, M)
+            total_overflow += overflow
+
+            levels.append([cands[i].code for i in keep])
+            for i in keep:
+                supports[cands[i].code] = int(gsup[i])
+
+            # ---- straggler rebalance (cost signal: embed counts) -------
+            cost = emb_pp.reshape(cfg.n_partitions, -1).sum(-1).astype(np.float64)
+            imbal = _imbalance(cost, self.mesh.n_workers)
+            rebalanced = False
+            if (cfg.rebalance and self.mesh.n_workers > 1
+                    and imbal > cfg.rebalance_threshold):
+                perm = _lpt_order(cost, self.mesh.n_workers)
+                take = lambda a: jnp.take(a, jnp.asarray(perm), axis=0)
+                pol, pmask = take(pol), take(pmask)
+                src_d, dst_d, emask_d = take(src_d), take(dst_d), take(emask_d)
+                order = order[perm]
+                rebalanced = True
+
+            stats.append(LevelStats(k + 1, C, len(keep), overflow,
+                                    time.perf_counter() - t0, map_secs,
+                                    rebalanced, imbal))
+
+            if cfg.checkpoint_dir:
+                self._save(cfg.checkpoint_dir, k + 1, levels, supports,
+                           pol, pmask, M, total_overflow, order)
+            k += 1
+
+        return DistMiningResult(levels, supports, stats, alphabet, minsup,
+                                total_overflow)
+
+    # ------------------------------------------------------------------
+    def _materialize_exact(self, keep_meta, pol, pmask, src, dst, emask, M):
+        """Materialize survivors; escalate M until no overflow (exactness
+        valve — keeps device supports == paper semantics)."""
+        cfg = self.cfg
+        while True:
+            new_pol, new_pmask, overflow = map_materialize(
+                self.mesh, keep_meta, pol, pmask, src, dst, emask,
+                max_embeddings=M)
+            if (overflow == 0 or not cfg.escalate_on_overflow
+                    or M >= cfg.max_embeddings_limit):
+                return new_pol, new_pmask, overflow, M
+            M = min(M * 2, cfg.max_embeddings_limit)
+
+    def _device_put(self, pol, pmask, src, dst, emask):
+        sharding = jax.sharding.NamedSharding(
+            self.mesh.mesh, self.mesh.spec_parts())
+        return tuple(jax.device_put(jnp.asarray(x), sharding)
+                     for x in (pol, pmask, src, dst, emask))
+
+    def _save(self, root, level, levels, supports, pol, pmask, M, overflow,
+              order):
+        # invert the cumulative rebalance permutation: checkpoints hold
+        # the OL store in canonical partition order (resume rebuilds the
+        # edge-OL store canonically and must stay row-aligned)
+        inv = np.empty_like(order)
+        inv[order] = np.arange(len(order))
+        max_edges = max(len(c) for l in levels for c in l)
+        state = {
+            "levels": [[code_to_array(c, max_edges) for c in l]
+                       for l in levels],
+            "support_codes": [code_to_array(c, max_edges) for c in supports],
+            "support_vals": np.asarray(list(supports.values()), np.int64),
+            "pol": np.asarray(pol)[inv],
+            "pmask": np.asarray(pmask)[inv],
+            "max_embeddings": M,
+            "total_overflow": overflow,
+        }
+        ckpt.save_step(root, level, state, metadata={"kind": "mirage-mining"})
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_f(a: np.ndarray, F: int, fill) -> np.ndarray:
+    pad = F - a.shape[-1]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+    return np.pad(a, widths, constant_values=fill)
+
+
+def _imbalance(cost: np.ndarray, w: int) -> float:
+    """max/mean of per-worker cost under the current blocked assignment."""
+    per_worker = cost.reshape(w, -1).sum(-1)
+    mean = per_worker.mean()
+    return float(per_worker.max() / mean) if mean > 0 else 1.0
+
+
+def _lpt_order(cost: np.ndarray, w: int) -> np.ndarray:
+    """Re-pack partitions into w balanced blocks (LPT), then emit the
+    permutation that lays blocks contiguously (matching the blocked
+    dim-0 sharding)."""
+    np_total = len(cost)
+    per = np_total // w
+    buckets: list[list[int]] = [[] for _ in range(w)]
+    load = np.zeros(w)
+    for i in np.argsort(-cost):
+        # lightest bucket with room
+        order = np.argsort(load)
+        for b in order:
+            if len(buckets[b]) < per:
+                buckets[b].append(int(i))
+                load[b] += cost[i]
+                break
+    return np.asarray([i for b in buckets for i in b], np.int32)

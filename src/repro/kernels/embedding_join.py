@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: fused per-level embedding join (OL intersection).
+
+This is the mapper's inner loop (paper Fig. 7 line 4 / Fig. 6): for every
+candidate c = (parent, stub, to, fwd, triple) and every graph g of the
+partition, decide which (parent-embedding m, edge-occurrence f) pairs
+join, and emit per-graph ``matched`` / ``match-count``.
+
+TPU adaptation notes (vs the paper's Java loop — see DESIGN.md §2/§5):
+
+  * One kernel launch covers the *whole level* (all C candidates): the
+    grid is ``(C, G/TG)`` and a **scalar-prefetched** candidate table
+    drives data-dependent BlockSpec index maps — candidate c streams the
+    OL tile of *its own parent* ``meta[c,0]`` and the edge-OL tile of its
+    own label triple ``meta[c,4]`` from HBM into VMEM.  This is the
+    block-sparse-style dispatch that replaces per-candidate host calls.
+  * The join is compare/mask work — VPU, not MXU.  Block shapes are
+    picked for VMEM residency and 128-lane alignment of the trailing
+    (F) axis; there is no matmul tiling to respect.
+  * The O(M·F·K) membership test (forward edges must add a *new* vertex)
+    is a K-step ``fori_loop`` with an (TG, M, F) accumulator instead of a
+    materialized (TG, M, F, K) tensor — K ≤ 16 keeps the working set
+    ≈ TG·M·F bytes, fitting VMEM for the default TG.
+
+Shapes (one partition):
+  pol   (P, G, M, K) int32   stacked parent OLs, PAD = -1
+  pmask (P, G, M)    int8    embedding validity
+  src   (T, G, F)    int32   edge-OL endpoints (directed triples)
+  dst   (T, G, F)    int32
+  emask (T, G, F)    int8
+  meta  (C, 5)       int32   [parent, stub, to, fwd, triple]
+
+Outputs:
+  matched (C, G) int32 — 1 iff graph g holds >= 1 child embedding
+  count   (C, G) int32 — number of joined pairs (cost-model signal)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["embedding_join_pallas", "DEFAULT_TILE_G"]
+
+DEFAULT_TILE_G = 128
+
+
+def _join_kernel(meta_ref, pol_ref, pmask_ref, src_ref, dst_ref, emask_ref,
+                 matched_ref, count_ref):
+    c = pl.program_id(0)
+    stub = meta_ref[c, 1]
+    to = meta_ref[c, 2]
+    fwd = meta_ref[c, 3]
+
+    pol = pol_ref[0]          # (TG, M, K) int32
+    pmask = pmask_ref[0]      # (TG, M) int8
+    src = src_ref[0]          # (TG, F) int32
+    dst = dst_ref[0]          # (TG, F) int32
+    emask = emask_ref[0]      # (TG, F) int8
+
+    tg, m, k = pol.shape
+
+    kids = jax.lax.broadcasted_iota(jnp.int32, (tg, m, k), 2)
+    stub_vals = jnp.sum(jnp.where(kids == stub, pol, 0), axis=-1)   # (TG, M)
+    to_vals = jnp.sum(jnp.where(kids == to, pol, 0), axis=-1)       # (TG, M)
+
+    hit = (src[:, None, :] == stub_vals[:, :, None])                # (TG,M,F)
+    hit &= (pmask[:, :, None] != 0) & (emask[:, None, :] != 0)
+
+    # forward: new endpoint must not be a parent vertex (K-step loop keeps
+    # the accumulator at (TG, M, F) instead of (TG, M, F, K)).
+    def body(kk, acc):
+        col = jax.lax.dynamic_index_in_dim(pol, kk, axis=2, keepdims=False)
+        return acc | (dst[:, None, :] == col[:, :, None])
+
+    member = jax.lax.fori_loop(
+        0, k, body, jnp.zeros((tg, m, f_dim(src)), jnp.bool_))
+    bwd_ok = dst[:, None, :] == to_vals[:, :, None]
+    ok = hit & jnp.where(fwd == 1, ~member, bwd_ok)                 # (TG,M,F)
+
+    matched_ref[0] = ok.any(axis=(1, 2)).astype(jnp.int32)
+    count_ref[0] = ok.sum(axis=(1, 2), dtype=jnp.int32)
+
+
+def f_dim(src):
+    return src.shape[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_g", "interpret"))
+def embedding_join_pallas(
+    meta: jnp.ndarray,    # (C, 5) int32
+    pol: jnp.ndarray,     # (P, G, M, K) int32
+    pmask: jnp.ndarray,   # (P, G, M) int8/bool
+    src: jnp.ndarray,     # (T, G, F) int32
+    dst: jnp.ndarray,     # (T, G, F) int32
+    emask: jnp.ndarray,   # (T, G, F) int8/bool
+    *,
+    tile_g: int = DEFAULT_TILE_G,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused level join.  G must be a multiple of ``tile_g`` (ops.py pads)."""
+    C = meta.shape[0]
+    P, G, M, K = pol.shape
+    T, _, F = src.shape
+    if G % tile_g:
+        raise ValueError(f"G={G} not a multiple of tile_g={tile_g}")
+    n_g = G // tile_g
+
+    pmask = pmask.astype(jnp.int8)
+    emask = emask.astype(jnp.int8)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C, n_g),
+        in_specs=[
+            pl.BlockSpec((1, tile_g, M, K),
+                         lambda c, g, meta: (meta[c, 0], g, 0, 0)),
+            pl.BlockSpec((1, tile_g, M),
+                         lambda c, g, meta: (meta[c, 0], g, 0)),
+            pl.BlockSpec((1, tile_g, F),
+                         lambda c, g, meta: (meta[c, 4], g, 0)),
+            pl.BlockSpec((1, tile_g, F),
+                         lambda c, g, meta: (meta[c, 4], g, 0)),
+            pl.BlockSpec((1, tile_g, F),
+                         lambda c, g, meta: (meta[c, 4], g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_g), lambda c, g, meta: (c, g)),
+            pl.BlockSpec((1, tile_g), lambda c, g, meta: (c, g)),
+        ],
+    )
+    matched, count = pl.pallas_call(
+        _join_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, G), jnp.int32),
+            jax.ShapeDtypeStruct((C, G), jnp.int32),
+        ],
+        interpret=interpret,
+    )(meta, pol, pmask, src, dst, emask)
+    return matched, count

@@ -1,0 +1,92 @@
+"""Jit'd dispatch wrappers around the mining kernels.
+
+``backend`` selection:
+  "ref"       pure-jnp (XLA) — default on CPU, also the test oracle
+  "pallas"    compiled Pallas TPU kernels — production TPU path
+  "interpret" Pallas kernels in interpret mode — CPU validation of the
+              exact kernel bodies (slow; tests only)
+
+The wrapper owns the padding contract: G is padded to the graph tile and
+C to the candidate tile with masked-off rows, so kernel callers never see
+alignment requirements.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .embedding_join import DEFAULT_TILE_G, embedding_join_pallas
+from .ref import embedding_join_ref, support_count_ref
+from .support_count import support_count_pallas
+
+Backend = Literal["ref", "pallas", "interpret"]
+
+__all__ = ["level_supports", "default_backend"]
+
+
+def default_backend() -> Backend:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def level_supports(
+    meta: jnp.ndarray,     # (C, 5) int32
+    pol: jnp.ndarray,      # (P, G, M, K) int32
+    pmask: jnp.ndarray,    # (P, G, M) bool/int8
+    src: jnp.ndarray,      # (T, G, F) int32
+    dst: jnp.ndarray,
+    emask: jnp.ndarray,
+    *,
+    backend: Backend | None = None,
+    tile_g: int = DEFAULT_TILE_G,
+    tile_c: int = 8,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-candidate (local_support, embed_count) for one level.
+
+    This is the whole map-phase compute of a MIRAGE iteration on one
+    partition: join + reduce, fused across all candidates.
+    """
+    backend = backend or default_backend()
+    C = meta.shape[0]
+    G = pol.shape[1]
+
+    if backend == "ref":
+        matched, count = embedding_join_ref(meta, pol, pmask, src, dst, emask)
+        return support_count_ref(matched, count)
+
+    interpret = backend == "interpret"
+    # pad graphs axis; padded graphs carry zero masks -> no contribution
+    tg = min(tile_g, _round_up(G, 8))
+    polp = _pad_to(pol, 1, tg, value=-1)
+    pmaskp = _pad_to(pmask.astype(jnp.int8), 1, tg)
+    srcp = _pad_to(src, 1, tg, value=-1)
+    dstp = _pad_to(dst, 1, tg, value=-1)
+    emaskp = _pad_to(emask.astype(jnp.int8), 1, tg)
+
+    matched, count = embedding_join_pallas(
+        meta, polp, pmaskp, srcp, dstp, emaskp,
+        tile_g=tg, interpret=interpret)
+
+    tc = min(tile_c, C) or 1
+    matchedp = _pad_to(matched, 0, tc)
+    countp = _pad_to(count, 0, tc)
+    sup, emb = support_count_pallas(matchedp, countp, tile_c=tc,
+                                    tile_g=tg, interpret=interpret)
+    return sup[:C], emb[:C]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

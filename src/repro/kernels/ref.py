@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (identical contracts).
+
+These are thin wrappers over `repro.core.embedding` — the semantic source
+of truth — reshaped to the kernels' (C, G) output contract so tests can
+``assert_allclose(kernel(x), ref(x))`` across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import join_valid
+
+__all__ = ["embedding_join_ref", "support_count_ref"]
+
+
+def embedding_join_ref(meta, pol, pmask, src, dst, emask):
+    """(C, G) matched / count — oracle for embedding_join_pallas."""
+    def one(cand):
+        parent, stub, to, fwd, tidx = (cand[0], cand[1], cand[2], cand[3],
+                                       cand[4])
+        p = jnp.take(pol, parent, axis=0)
+        pm = jnp.take(pmask, parent, axis=0).astype(bool)
+        s = jnp.take(src, tidx, axis=0)
+        d = jnp.take(dst, tidx, axis=0)
+        em = jnp.take(emask, tidx, axis=0).astype(bool)
+        valid = join_valid(p, pm, s, d, em, stub, to, fwd)
+        return (valid.any(axis=(1, 2)).astype(jnp.int32),
+                valid.sum(axis=(1, 2), dtype=jnp.int32))
+
+    matched, count = jax.lax.map(one, meta)
+    return matched, count
+
+
+def support_count_ref(matched, count):
+    """(C,) support / embed totals — oracle for support_count_pallas."""
+    return (matched.sum(axis=1, dtype=jnp.int32),
+            count.sum(axis=1, dtype=jnp.int32))

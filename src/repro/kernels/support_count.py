@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: per-candidate support reduction.
+
+Reduces the join kernel's per-graph outputs to per-candidate scalars:
+
+  support[c] = sum_g matched[c, g]      (# graphs containing the child)
+  embeds[c]  = sum_g count[c, g]        (total join pairs — cost signal)
+
+The grid is (C/TC, G/TG) with the G axis *innermost*, so each output
+block (TC,) is revisited across the G sweep and accumulated in place —
+the canonical Pallas revisited-output reduction.  The G tile is the same
+as the join kernel's so the two launches stream identically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["support_count_pallas"]
+
+
+def _reduce_kernel(matched_ref, count_ref, sup_ref, emb_ref):
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init():
+        sup_ref[...] = jnp.zeros_like(sup_ref)
+        emb_ref[...] = jnp.zeros_like(emb_ref)
+
+    sup_ref[...] += jnp.sum(matched_ref[...], axis=1, dtype=jnp.int32)
+    emb_ref[...] += jnp.sum(count_ref[...], axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "tile_g", "interpret"))
+def support_count_pallas(
+    matched: jnp.ndarray,   # (C, G) int32
+    count: jnp.ndarray,     # (C, G) int32
+    *,
+    tile_c: int = 8,
+    tile_g: int = 128,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    C, G = matched.shape
+    if C % tile_c or G % tile_g:
+        raise ValueError(f"(C={C}, G={G}) not multiples of ({tile_c},{tile_g})")
+    grid = (C // tile_c, G // tile_g)
+    sup, emb = pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_c, tile_g), lambda c, g: (c, g)),
+            pl.BlockSpec((tile_c, tile_g), lambda c, g: (c, g)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_c,), lambda c, g: (c,)),
+            pl.BlockSpec((tile_c,), lambda c, g: (c,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(matched, count)
+    return sup, emb

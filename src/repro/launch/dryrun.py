@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes and record memory/cost/roofline artifacts.
+
+    python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k \
+        --mesh single --out results
+    python -m repro.launch.dryrun --all --mesh both --out results
+
+``--all`` orchestrates one subprocess per cell (fresh compile, JSON
+result cache keyed on (mesh, arch, shape) — rerunning skips finished
+cells).  Skipped cells (long_500k on full-attention archs, per the
+assignment) are recorded with reason.
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, variant: str = "") -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import SHAPES, cell_applicable, shape_lowers
+    from repro.launch.mesh import make_production_mesh, worker_count
+    from repro.launch.specs import cache_specs_struct, input_specs, params_specs
+    from repro.models.registry import build, get_config
+    from repro.optim.adamw import AdamWConfig
+    from repro.roofline.analysis import analyze
+    from repro.runtime.sharding import (active_mesh, batch_specs,
+                                        cache_specs, param_shardings,
+                                        param_specs)
+    from repro.train.train_step import init_train_state, make_train_step
+
+    from repro.runtime.sharding import compute_specs
+
+    cfg = get_config(arch)
+    if variant:
+        cfg = dataclasses.replace(cfg, **json.loads(variant))
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": cfg.name, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = worker_count(mesh)
+    fns = build(cfg)
+    step_name = shape_lowers(shape)
+
+    t0 = time.perf_counter()
+    params_sds = params_specs(cfg)
+    if (os.environ.get("DRYRUN_DECODE_WEIGHTS") == "replicated"
+            and shape.kind == "decode"):
+        # serving-mode weights: tp-sharded only, dp-replicated — kills
+        # the per-token FSDP all-gather at the cost of (params·2/tp)
+        # bytes of HBM per device (§Perf decode iteration)
+        p_shard = jax.tree_util.tree_map(
+            lambda s: jax.sharding.NamedSharding(mesh, s),
+            compute_specs(params_sds, mesh),
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    else:
+        p_shard = param_shardings(params_sds, mesh)
+    batch_sds = input_specs(cfg, shape)
+    b_spec = batch_specs(cfg, mesh, batch_sds)
+    b_shard = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), b_spec,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    with mesh, active_mesh(mesh):
+        if step_name == "train_step":
+            opt_cfg = AdamWConfig()
+            # microbatch so each accumulation step carries ~1 sequence per
+            # dp shard — the activation-memory/global-batch decoupling a
+            # real run needs at these batch sizes (perf lever; see §Perf)
+            dp = chips // mesh.shape["model"]
+            micro = int(os.environ.get(
+                "DRYRUN_MICROBATCHES", max(1, shape.global_batch // dp)))
+            step_fn = make_train_step(cfg, opt_cfg, fns["loss_fn"],
+                                      microbatches=micro)
+            opt_sds = jax.eval_shape(init_train_state, params_sds)
+            o_shard = {"m": p_shard, "v": p_shard,
+                       "step": jax.sharding.NamedSharding(
+                           mesh, jax.sharding.PartitionSpec())}
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shard),
+                donate_argnums=(0, 1),
+            ).lower(params_sds, opt_sds, batch_sds)
+        elif step_name == "prefill_step":
+            lowered = jax.jit(
+                fns["prefill"], in_shardings=(p_shard, b_shard),
+            ).lower(params_sds, batch_sds)
+        else:   # decode_step
+            cache_sds = cache_specs_struct(cfg, shape)
+            c_spec = cache_specs(cfg, mesh, cache_sds)
+            c_shard = jax.tree_util.tree_map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), c_spec,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(
+                fns["decode"],
+                in_shardings=(p_shard, c_shard, b_shard, None),
+                donate_argnums=(1,),
+            ).lower(params_sds, cache_sds, batch_sds, pos)
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    memstats = compiled.memory_analysis()
+    try:
+        costd = compiled.cost_analysis()
+    except Exception:
+        costd = {}
+    hlo = compiled.as_text()
+    dump = os.environ.get("DRYRUN_DUMP_HLO")
+    if dump:
+        with open(dump, "w") as f:
+            f.write(hlo)
+
+    micro = 1
+    if step_name == "train_step":
+        micro = int(os.environ.get("DRYRUN_MICROBATCHES",
+                                   max(1, shape.global_batch
+                                       // (chips // mesh.shape["model"]))))
+    report = analyze(cfg, shape, mesh_name=mesh_kind, chips=chips,
+                     step=step_name, hlo_text=hlo, memory_stats=memstats,
+                     cost_analysis=costd, tp=mesh.shape["model"],
+                     microbatches=micro, notes=variant)
+    out = report.to_json()
+    out.update({
+        "status": "ok",
+        "lower_seconds": t_lower,
+        "compile_seconds": t_compile,
+        "hlo_bytes_len": len(hlo),
+    })
+    print(f"[dryrun] {cfg.name} {shape_name} {mesh_kind}: "
+          f"args={out['argument_bytes']/2**30:.2f}GiB "
+          f"temp={out['temp_bytes']/2**30:.2f}GiB "
+          f"flops/dev={out['hlo_flops']:.3e} "
+          f"bottleneck={out['bottleneck']}")
+    print(f"[dryrun] memory_analysis: {memstats}")
+    print(f"[dryrun] cost_analysis flops: {costd.get('flops')}")
+    return out
+
+
+def cell_path(out_dir, mesh, arch, shape, variant=""):
+    import hashlib
+    tag = ""
+    if variant:
+        tag = "__" + hashlib.sha1(variant.encode()).hexdigest()[:8]
+    # normalize to the registry module id so CLI aliases share the cache
+    from repro.models.registry import _ALIASES
+    safe = _ALIASES.get(arch, arch).replace("-", "_").replace(".", "p")
+    return os.path.join(out_dir, "dryrun", mesh,
+                        f"{safe}__{shape}{tag}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--variant", default="",
+                    help="JSON dict of ModelConfig overrides (perf iters)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        from repro.configs.base import SHAPES
+        from repro.models.registry import ARCHS, get_config
+        jobs = [(a, s, m) for m in meshes for a in ARCHS for s in SHAPES]
+        failures = []
+        for (a, s, m) in jobs:
+            path = cell_path(args.out, m, a, s)
+            if os.path.exists(path) and not args.force:
+                print(f"[skip-cached] {m} {a} {s}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--mesh", m,
+                   "--out", args.out]
+            print(f"[run] {m} {a} {s}")
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout,
+                                   capture_output=True, text=True)
+            except subprocess.TimeoutExpired:
+                failures.append((m, a, s, "TIMEOUT"))
+                print(f"[FAIL-TIMEOUT] {m} {a} {s}")
+                continue
+            if r.returncode != 0:
+                failures.append((m, a, s, r.stderr[-2000:]))
+                print(f"[FAIL] {m} {a} {s}\n{r.stderr[-2000:]}")
+            else:
+                lines = [l for l in r.stdout.strip().splitlines()
+                         if l.startswith("[dryrun]") or "skipped" in l]
+                print(lines[0] if lines else "[done]")
+        print(f"\n{len(failures)} failures")
+        for f in failures:
+            print("FAILED:", f[0], f[1], f[2])
+        sys.exit(1 if failures else 0)
+
+    for m in meshes:
+        path = cell_path(args.out, m, args.arch, args.shape, args.variant)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        try:
+            res = run_cell(args.arch, args.shape, m, args.out,
+                           variant=args.variant)
+        except Exception:
+            traceback.print_exc()
+            sys.exit(1)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"[saved] {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+"""Dry-run of the MIRAGE mining step itself on the production mesh —
+the paper-representative roofline cell.
+
+Lowers one level's map+shuffle+reduce (support round) and the survivor
+materialization at production-plausible shapes:
+
+    NP = parts_per_device × 512 partitions, G graphs each, P patterns,
+    C candidates, M embeddings, F edge occurrences.
+
+The compute body is the reference join (the Pallas kernel's algorithm,
+XLA-compiled — the TPU kernel path swaps in on hardware with identical
+shapes/dataflow), so the FLOP/byte/collective structure is the real
+thing.
+
+    python -m repro.launch.dryrun_mining --mesh both --out results
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+
+def run(mesh_kind: str, out_dir: str, *, reduce: str, parts_per_dev: int = 4,
+        P: int = 64, C: int = 256, G: int = 2048, M: int = 32, K: int = 6,
+        T: int = 64, F: int = 32, minsup: int = 100) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.mapreduce import (MiningMesh, _materialize_program,
+                                      _support_program)
+    from repro.launch.mesh import make_production_mesh, worker_count
+    from repro.roofline.hlo import parse_hlo_cost
+    from repro.roofline.hw import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    mmesh = MiningMesh(mesh)
+    W = mmesh.n_workers
+    NP = parts_per_dev * W
+    Cp = ((C + W - 1) // W) * W
+
+    sds = jax.ShapeDtypeStruct
+    meta = sds((Cp, 5), jnp.int32)
+    pol = sds((NP, P, G, M, K), jnp.int32)
+    pmask = sds((NP, P, G, M), jnp.bool_)
+    src = sds((NP, T, G, F), jnp.int32)
+    dst = sds((NP, T, G, F), jnp.int32)
+    emask = sds((NP, T, G, F), jnp.bool_)
+
+    out = {"kind": "mining", "mesh": mesh_kind, "chips": W,
+           "reduce": reduce, "parts_per_dev": parts_per_dev,
+           "shapes": dict(NP=NP, P=P, C=Cp, G=G, M=M, K=K, T=T, F=F)}
+    t0 = time.perf_counter()
+    for phase, prog, args in (
+            ("support", _support_program(mmesh, minsup, "ref", reduce),
+             (meta, pol, pmask, src, dst, emask)),
+            ("materialize", _materialize_program(mmesh, M),
+             (meta, pol, pmask, src, dst, emask))):
+        lowered = prog.lower(*args)
+        compiled = lowered.compile()
+        cost = parse_hlo_cost(compiled.as_text())
+        mem = compiled.memory_analysis()
+        # analytic HBM: the join streams pol + eol once per candidate tile
+        pol_b = parts_per_dev * P * G * M * K * 4
+        eol_b = parts_per_dev * T * G * F * 9
+        analytic = pol_b / P * Cp / parts_per_dev + eol_b  # per device
+        out[phase] = {
+            "flops": cost.flops,
+            "hbm_bytes_analytic": analytic,
+            "wire_bytes": cost.collective_wire_bytes,
+            "collectives": {k: v[0] for k, v in cost.collectives.items()},
+            "t_compute": cost.flops / PEAK_FLOPS_BF16,
+            "t_memory": analytic / HBM_BW,
+            "t_collective": cost.collective_wire_bytes / ICI_BW,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "argument_bytes": mem.argument_size_in_bytes,
+        }
+        terms = {k: out[phase][f"t_{k}"]
+                 for k in ("compute", "memory", "collective")}
+        out[phase]["bottleneck"] = max(terms, key=terms.get)
+    out["seconds"] = time.perf_counter() - t0
+
+    os.makedirs(os.path.join(out_dir, "dryrun", mesh_kind), exist_ok=True)
+    tag = f"__pp{parts_per_dev}" if parts_per_dev != 4 else ""
+    path = os.path.join(out_dir, "dryrun", mesh_kind,
+                        f"mirage_mining__{reduce}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[dryrun-mining] {mesh_kind} reduce={reduce}: "
+          f"support bottleneck={out['support']['bottleneck']} "
+          f"wire={out['support']['wire_bytes']:.3e}B "
+          f"temp={out['support']['temp_bytes']/2**30:.2f}GiB -> {path}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--reduce", default="both",
+                    choices=["psum", "reduce_scatter", "both"])
+    ap.add_argument("--parts-per-dev", type=int, default=4)
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    reduces = (["psum", "reduce_scatter"] if args.reduce == "both"
+               else [args.reduce])
+    for m in meshes:
+        for r in reduces:
+            run(m, args.out, reduce=r, parts_per_dev=args.parts_per_dev)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction (assignment-specified shapes).
+
+single pod : (16, 16)    -> ("data", "model")   = 256 chips (TPU v5e pod)
+multi-pod  : (2, 16, 16) -> ("pod", "data", "model") = 512 chips
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; smoke tests see
+one CPU device).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_mesh", "worker_count"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} — the "
+            f"dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before importing jax")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        devices=devs[:n])
+
+
+def worker_count(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))

@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape × step).
+
+This is the dry-run's data layer: weak-type-correct, shardable, zero
+allocation.  Modality frontends are stubs per the assignment —
+``[audio]`` gets precomputed mel-frame embeddings, ``[vlm]`` precomputed
+patch embeddings + 3-axis M-RoPE positions.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.registry import build
+from ..models.transformer import init_cache
+
+__all__ = ["input_specs", "params_specs", "cache_specs_struct"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Batch ShapeDtypeStructs for the step function this shape lowers."""
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    dt = jnp.dtype(cfg.dtype)
+    batch: dict[str, Any] = {}
+
+    s_tok = 1 if kind == "decode" else S
+    if cfg.family == "vlm":
+        batch["embeds"] = _sds((B, s_tok, cfg.d_model), dt)
+        batch["positions3"] = _sds((3, B, s_tok), jnp.int32)
+    else:
+        batch["tokens"] = _sds((B, s_tok), jnp.int32)
+    if cfg.family in ("audio", "encdec") and kind != "decode":
+        batch["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model), dt)
+    if kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    fns = build(cfg)
+    return jax.eval_shape(fns["init"], jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def cache_specs_struct(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """Decode-shape KV/state cache stand-ins (cache len = shape.seq_len)."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           dtype=jnp.bfloat16))

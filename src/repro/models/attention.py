@@ -1,0 +1,352 @@
+"""Attention layers: GQA (+bias/softcap/sliding-window), MLA, cross-attn.
+
+All full-sequence paths run **online-softmax chunked attention** (Rabe &
+Staats) — the (S, T) score matrix is never materialized, which is what
+makes the 32k-prefill and 4k-train cells lowerable at production batch
+sizes.  Decode paths attend one query over the cache directly.
+
+MLA (deepseek-v2) implements the *compressed-latent cache*: prefill
+caches (c_kv, k_rope) only — (kv_lora + rope_dim) per token instead of
+2·H·dh — and decode runs the absorbed-matmul form entirely in latent
+space.
+
+Cache contract (per layer):
+  GQA:  {"k": (B, T, Kv, dh), "v": (B, T, Kv, dh)}
+  MLA:  {"ckv": (B, T, kv_lora), "kr": (B, T, rope_dim)}
+  cross:{"k": (B, F, Kv, dh), "v": ...}  (computed once from encoder out)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import apply_mrope, apply_rope, dense_init, rope_table, softcap
+
+__all__ = ["init_attention", "attention", "init_mla", "mla",
+           "chunked_mha", "plain_mha"]
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (shared by every variant)
+# ---------------------------------------------------------------------------
+
+def _block_mask(q_pos, k_pos, *, causal: bool, window: Optional[int],
+                kv_len: Optional[jnp.ndarray]):
+    """(qc, kc) bool mask for a block given absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def plain_mha(q, k, v, *, scale, causal=False, window=None, cap=None,
+              q_offset=0, kv_len=None):
+    """Materializing attention — decode / tiny-sequence path.
+    q: (B, S, H, D), k/v: (B, T, Kv, Dv)."""
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    qg = q.reshape(B, S, Kv, rep, D)
+    s = jnp.einsum("bskrd,btkd->bkrst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = softcap(s, cap)
+    q_pos = q_offset + jnp.arange(S)
+    mask = _block_mask(q_pos, jnp.arange(T), causal=causal, window=window,
+                       kv_len=kv_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrst,btkd->bskrd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_mha(q, k, v, *, scale, causal=True, window=None, cap=None,
+                q_offset=0, q_chunk=512, kv_chunk=1024, schedule="full"):
+    """Online-softmax attention over KV chunks: O(qc·kc) live scores.
+
+    Compiled as ONE outer scan over q blocks × one inner loop over kv
+    blocks (O(1) HLO size in sequence length).  ``schedule``:
+
+      "full" — inner scan visits every kv block and masks above-diagonal
+               blocks.  2× causal-FLOP overcount, but statically counted
+               trip counts (exact roofline attribution).
+      "tri"  — inner ``fori_loop`` with dynamic bound (block row index):
+               above-diagonal blocks are never computed.  Halves causal
+               attention compute; trip count is data-dependent in HLO
+               (roofline uses the analytic (nq+1)/2nk factor).
+    """
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // Kv
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, T)
+    nq, nk = S // qc, T // kc
+    assert S % qc == 0 and T % kc == 0, (S, T, qc, kc)
+
+    qb = q.reshape(B, nq, qc, Kv, rep, D).swapaxes(0, 1)   # (nq,B,qc,Kv,r,D)
+    kb = k.reshape(B, nk, kc, Kv, D).swapaxes(0, 1)        # (nk,B,kc,Kv,D)
+    vb = v.reshape(B, nk, kc, Kv, Dv).swapaxes(0, 1)
+
+    def kv_step(qi, qblk, q_pos, carry, kj):
+        m, l, acc = carry
+        kblk = jax.lax.dynamic_index_in_dim(kb, kj, 0, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, kj, 0, keepdims=False)
+        k_pos = kj * kc + jnp.arange(kc)
+        s = jnp.einsum("bqkrd,btkd->bkrqt", qblk.astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * scale
+        s = softcap(s, cap)
+        msk = _block_mask(q_pos, k_pos, causal=causal, window=window,
+                          kv_len=None)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        r = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * r + p.sum(-1)
+        acc_new = acc * r[..., None] + jnp.einsum(
+            "bkrqt,btkd->bkrqd", p, vblk.astype(jnp.float32))
+        return m_new, l_new, acc_new
+
+    # checkpoint each kv block: backward recomputes the (qc, kc) scores
+    # blockwise instead of saving every block's residuals (which would
+    # materialize the full B·H·S² score tensor across the scan)
+    kv_step_ckpt = jax.checkpoint(kv_step, static_argnums=())
+
+    def per_qblock(carry, inp):
+        qi, qblk = inp
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+        m0 = jnp.full((B, Kv, rep, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, rep, qc), jnp.float32)
+        a0 = jnp.zeros((B, Kv, rep, qc, Dv), jnp.float32)
+        if schedule == "tri" and causal and window is None and T == S:
+            m, l, acc = jax.lax.fori_loop(
+                0, qi + 1,
+                lambda kj, c: kv_step_ckpt(qi, qblk, q_pos, c, kj),
+                (m0, l0, a0))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                lambda c, kj: (kv_step_ckpt(qi, qblk, q_pos, c, kj), None),
+                (m0, l0, a0), jnp.arange(nk))
+        o = acc / jnp.maximum(l[..., None], 1e-37)
+        return carry, o
+
+    _, o = jax.lax.scan(per_qblock, None, (jnp.arange(nq), qb))
+    # (nq, B, Kv, rep, qc, Dv) -> (B, S, H, Dv)
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, Dv)
+    return o.astype(q.dtype)
+
+
+def mha(q, k, v, *, scale, causal, window, cap, q_offset=0, kv_len=None,
+        q_chunk=512, kv_chunk=1024, schedule="full"):
+    """Dispatch: chunked for long sequences, plain for short/decode."""
+    S, T = q.shape[1], k.shape[1]
+    if S <= q_chunk or S % q_chunk or T % kv_chunk:
+        return plain_mha(q, k, v, scale=scale, causal=causal, window=window,
+                         cap=cap, q_offset=q_offset, kv_len=kv_len)
+    return chunked_mha(q, k, v, scale=scale, causal=causal, window=window,
+                       cap=cap, q_offset=q_offset, q_chunk=q_chunk,
+                       kv_chunk=kv_chunk, schedule=schedule)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, key, *, cross: bool = False) -> dict:
+    dh = cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.n_heads, dh)),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.n_kv, dh)),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.n_kv, dh)),
+        "wo": dense_init(ks[3], (cfg.n_heads, dh, cfg.d_model)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, dh), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv, dh), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv, dh), jnp.float32)
+    return p
+
+
+def attention(params, x, cfg, *, layer_local: bool = False,
+              positions=None, positions3=None,
+              cache: Optional[dict] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              cross_inputs: Optional[jnp.ndarray] = None,
+              is_cross: bool = False,
+              make_cache: bool = False):
+    """Unified GQA layer.
+
+    Modes:
+      train:        cache=None, make_cache=False          -> (y, None)
+      prefill:      make_cache=True                       -> (y, cache)
+      decode:       cache + cache_pos                     -> (y, new cache)
+      cross:        is_cross + (cross_inputs | static cache)
+    """
+    B, S, _ = x.shape
+    dh = cfg.head_dim
+    dt = x.dtype
+    scale = 1.0 / np.sqrt(dh)
+    schedule = getattr(cfg, "attn_schedule", "full")
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+
+    if is_cross:
+        # encoder-side k/v: no rope, no causal mask
+        if cross_inputs is not None:
+            k = jnp.einsum("bfd,dhk->bfhk", cross_inputs,
+                           params["wk"].astype(dt))
+            v = jnp.einsum("bfd,dhk->bfhk", cross_inputs,
+                           params["wv"].astype(dt))
+            if "bk" in params:
+                k, v = k + params["bk"].astype(dt), v + params["bv"].astype(dt)
+            new_cache = {"k": k, "v": v} if make_cache else cache
+        else:  # decode: static cross cache built at prefill
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+        o = mha(q, k, v, scale=scale, causal=False, window=None,
+                cap=cfg.attn_softcap, schedule=schedule)
+        y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+        return y, new_cache
+
+    if positions is None:
+        base = 0 if cache_pos is None else cache_pos
+        positions = base + jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    def rope_fn(t):
+        if cfg.mrope_sections is not None and positions3 is not None:
+            return apply_mrope(t, positions3, dh, cfg.rope_theta,
+                               cfg.mrope_sections)
+        sin, cos = rope_table(positions, dh, cfg.rope_theta)
+        return apply_rope(t, sin, cos)
+
+    q = rope_fn(q)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if "bk" in params:
+        k, v = k + params["bk"].astype(dt), v + params["bv"].astype(dt)
+    k = rope_fn(k)
+
+    window = cfg.sliding_window if layer_local else None
+
+    if cache is None:
+        o = mha(q, k, v, scale=scale, causal=True, window=window,
+                cap=cfg.attn_softcap, schedule=schedule)
+        new_cache = {"k": k, "v": v} if make_cache else None
+    else:
+        # decode: write new k/v at cache_pos, attend over the prefix
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        kv_len = cache_pos + S
+        o = plain_mha(q, ck, cv, scale=scale, causal=True, window=window,
+                      cap=cfg.attn_softcap, q_offset=cache_pos,
+                      kv_len=kv_len)
+        new_cache = {"k": ck, "v": cv}
+
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): compressed-latent KV cache + absorbed decode
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg, key) -> dict:
+    ks = jax.random.split(key, 8)
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {
+        "w_dkv": dense_init(ks[0], (cfg.d_model, cfg.kv_lora)),
+        "w_kr": dense_init(ks[1], (cfg.d_model, cfg.qk_rope_dim)),
+        "w_uk": dense_init(ks[2], (cfg.kv_lora, H, cfg.qk_nope_dim)),
+        "w_uv": dense_init(ks[3], (cfg.kv_lora, H, cfg.v_head_dim)),
+        "wo": dense_init(ks[4], (H, cfg.v_head_dim, cfg.d_model)),
+        "kv_norm": {"scale": jnp.ones((cfg.kv_lora,), jnp.float32)},
+    }
+    if cfg.q_lora:
+        p["w_dq"] = dense_init(ks[5], (cfg.d_model, cfg.q_lora))
+        p["w_uq"] = dense_init(ks[6], (cfg.q_lora, H, qk))
+        p["q_norm"] = {"scale": jnp.ones((cfg.q_lora,), jnp.float32)}
+    else:
+        p["wq"] = dense_init(ks[5], (cfg.d_model, H, qk))
+    return p
+
+
+def mla(params, x, cfg, *, cache=None, cache_pos=None, make_cache=False,
+        positions=None):
+    from .common import rmsnorm
+    B, S, _ = x.shape
+    dt = x.dtype
+    H = cfg.n_heads
+    nope, rdim = cfg.qk_nope_dim, cfg.qk_rope_dim
+    scale = 1.0 / np.sqrt(nope + rdim)
+
+    if positions is None:
+        base = 0 if cache_pos is None else cache_pos
+        positions = base + jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+    sin, cos = rope_table(positions, rdim, cfg.rope_theta)
+
+    if cfg.q_lora:
+        cq = rmsnorm(params["q_norm"], jnp.einsum(
+            "bsd,dr->bsr", x, params["w_dq"].astype(dt)), eps=cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, sin, cos)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    ckv = rmsnorm(params["kv_norm"], ckv, eps=cfg.norm_eps)
+    kr = jnp.einsum("bsd,dr->bsr", x, params["w_kr"].astype(dt))
+    kr = apply_rope(kr[:, :, None, :], sin, cos)[:, :, 0]     # shared head
+
+    if cache is not None and cache_pos is not None:
+        # ---- absorbed decode: stay in latent space -------------------
+        T = cache["ckv"].shape[1]
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, cache_pos, 0))
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope,
+                           params["w_uk"].astype(dt))          # (B,S,H,lora)
+        s = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                        cc.astype(jnp.float32))
+             + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                          ckr.astype(jnp.float32))) * scale
+        kv_len = cache_pos + S
+        k_pos = jnp.arange(T)
+        q_pos = cache_pos + jnp.arange(S)
+        msk = (q_pos[:, None] >= k_pos[None, :]) & (k_pos[None, :] < kv_len)
+        s = jnp.where(msk[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", p, cc.astype(jnp.float32))
+        o = jnp.einsum("bshr,rhv->bshv", o_lat.astype(dt),
+                       params["w_uv"].astype(dt))
+        y = jnp.einsum("bshv,hvd->bsd", o, params["wo"].astype(dt))
+        return y, {"ckv": cc, "kr": ckr}
+
+    # ---- train / prefill: decompress k,v and run chunked attention ----
+    k_nope = jnp.einsum("bsr,rhn->bshn", ckv, params["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhv->bshv", ckv, params["w_uv"].astype(dt))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, rdim))], -1)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    o = mha(qf, k, v, scale=scale, causal=True, window=None, cap=None)
+    y = jnp.einsum("bshv,hvd->bsd", o, params["wo"].astype(dt))
+    new_cache = {"ckv": ckv, "kr": kr} if make_cache else None
+    return y, new_cache

@@ -1,0 +1,117 @@
+"""Shared model building blocks (pure JAX — no flax/optax on purpose).
+
+Convention: a layer is a pair of plain functions
+    init_<layer>(cfg, key, ...) -> params (nested dict of jnp arrays)
+    <layer>(params, x, ...)     -> y
+Parameters are stored fp32 and cast to the compute dtype at use
+(mixed-precision policy), so the optimizer state stays full precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["dense_init", "norm_init", "rmsnorm", "layernorm", "rope_table",
+           "apply_rope", "apply_mrope", "softcap", "cdtype", "split_keys"]
+
+
+def cdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def dense_init(key, shape, *, scale: Optional[float] = None,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """Truncated-normal fan-in init (maxtext-style)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def norm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6, zero_centered: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    scale = params["scale"]
+    if zero_centered:  # gemma-style (1 + w)
+        scale = 1.0 + scale
+    return (y * scale).astype(dt)
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = y * params["scale"]
+    if "bias" in params:
+        out = out + params["bias"]
+    return out.astype(dt)
+
+
+def rope_table(positions: jnp.ndarray, dim: int, theta: float
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(sin, cos) tables for given positions (..., S) -> (..., S, dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (..., S, H, D); sin/cos: (..., S, D/2) broadcast over heads."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    s, c = sin[..., None, :], cos[..., None, :]
+    if s.ndim < x1.ndim:  # (S, D/2) -> broadcast batch
+        s, c = s[None], c[None]
+    # rotate-half convention (llama)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, dim: int,
+                theta: float, sections: tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: the rotary dim is split into (t, h, w) sections,
+    each rotated by its own position stream.  ``positions3``: (3, B, S).
+    Text tokens carry identical t/h/w positions (the provided stub path).
+    """
+    d2 = dim // 2
+    sec = np.asarray(sections)
+    assert sec.sum() == d2, f"mrope sections {sections} != dim/2 {d2}"
+    sins, coss = [], []
+    start = 0
+    for i, width in enumerate(sec):
+        freqs = 1.0 / (theta ** (jnp.arange(start, start + width,
+                                            dtype=jnp.float32) * 2.0 / dim))
+        ang = positions3[i][..., None].astype(jnp.float32) * freqs
+        sins.append(jnp.sin(ang))
+        coss.append(jnp.cos(ang))
+        start += width
+    sin = jnp.concatenate(sins, -1)   # (B, S, d2)
+    cos = jnp.concatenate(coss, -1)
+    x1, x2 = x[..., :d2], x[..., d2:]
+    s, c = sin[:, :, None, :], cos[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

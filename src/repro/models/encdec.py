@@ -1,0 +1,67 @@
+"""Encoder-decoder assembly (whisper-base backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed mel-frame embeddings (B, F, d_model); the encoder is
+a non-causal transformer over frames, the decoder is the standard
+`transformer.py` stack with cross-attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, init_attention
+from .common import norm_init, rmsnorm
+from .mlp import init_mlp, mlp
+from .transformer import forward_lm, init_lm
+
+__all__ = ["init_encdec", "forward_encdec", "encode"]
+
+
+def init_encoder(cfg, key) -> dict:
+    def init_layer(k):
+        ks = jax.random.split(k, 2)
+        return {"ln1": norm_init(cfg.d_model),
+                "attn": init_attention(cfg, ks[0]),
+                "ln2": norm_init(cfg.d_model),
+                "mlp": init_mlp(cfg, ks[1])}
+    keys = jax.random.split(key, cfg.encoder_layers)
+    return {"layers": jax.vmap(init_layer)(keys),
+            "final_norm": norm_init(cfg.d_model)}
+
+
+def init_encdec(cfg, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    params = init_lm(cfg, k1)               # decoder + embed + head
+    params["encoder"] = init_encoder(cfg, k2)
+    return params
+
+
+def encode(params, frames, cfg):
+    """frames: (B, F, d_model) precomputed embeddings -> encoder output."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, lp):
+        from ..runtime.sharding import gather_for_compute
+        lp = gather_for_compute(lp, cast=jnp.dtype(cfg.dtype))
+        h = rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+        # non-causal self-attention over frames
+        y, _ = attention(lp["attn"], h, cfg, is_cross=True, cross_inputs=h)
+        x = x + y
+        h = rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+        return x + mlp(lp["mlp"], h, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"]["layers"])
+    return rmsnorm(params["encoder"]["final_norm"], x, eps=cfg.norm_eps)
+
+
+def forward_encdec(params, cfg, *, tokens, frames=None, encoder_out=None,
+                   cache=None, cache_pos=None, make_cache=False):
+    """Returns (logits, cache, aux).  For decode, pass ``cache`` built at
+    prefill (cross k/v are static inside it) and ``encoder_out=None``."""
+    if encoder_out is None and frames is not None:
+        encoder_out = encode(params, frames, cfg)
+    return forward_lm(params, cfg, tokens=tokens, cache=cache,
+                      cache_pos=cache_pos, encoder_out=encoder_out,
+                      make_cache=make_cache)

@@ -1,0 +1,157 @@
+"""Architecture registry: ``--arch <id>`` -> config + model functions.
+
+``build(cfg)`` returns the family-appropriate function set:
+    init(key) -> params
+    loss_fn(params, batch) -> (loss, aux-metrics)      [train_step]
+    prefill(params, batch) -> (logits, cache)          [prefill_step]
+    decode(params, cache, batch, pos) -> (logits, cache) [decode_step]
+
+Param counts come from ``jax.eval_shape`` over the real initializers —
+exact by construction, used for the analytic 6·N·D roofline term.
+"""
+from __future__ import annotations
+
+import functools
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .encdec import encode, forward_encdec, init_encdec
+from .transformer import forward_lm, init_cache, init_lm
+
+ARCHS = [
+    "whisper_base", "zamba2_2p7b", "granite_20b", "gemma2_2b", "minicpm_2b",
+    "qwen2p5_14b", "deepseek_v2_lite", "phi3p5_moe", "xlstm_1p3b",
+    "qwen2_vl_72b",
+]
+
+_ALIASES = {
+    "whisper-base": "whisper_base", "zamba2-2.7b": "zamba2_2p7b",
+    "granite-20b": "granite_20b", "gemma2-2b": "gemma2_2b",
+    "minicpm-2b": "minicpm_2b", "qwen2.5-14b": "qwen2p5_14b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "phi3.5-moe-42b-a6.6b": "phi3p5_moe", "xlstm-1.3b": "xlstm_1p3b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+__all__ = ["ARCHS", "get_config", "get_smoke_config", "build",
+           "count_params", "list_archs"]
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+def _module(name: str):
+    name = _ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke_config()
+
+
+# ---------------------------------------------------------------------------
+
+def count_params(cfg, active_only: bool = False) -> int:
+    """Exact parameter count via eval_shape over the real initializer."""
+    init = init_encdec if cfg.family in ("encdec", "audio") else init_lm
+    shapes = jax.eval_shape(lambda k: init(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if "moe" in keys and "shared" not in keys and "router" not in keys:
+            expert += n
+    if active_only and cfg.n_experts:
+        total -= int(expert * (1 - cfg.top_k / cfg.n_experts))
+    return total
+
+
+# ---------------------------------------------------------------------------
+
+def _ce_loss(logits, labels, vocab):
+    """CE that respects vocab (TP) sharding: the gold logit is extracted
+    with a masked sum, NOT take_along_axis — a gather over the sharded
+    vocab dim makes XLA all-gather the full (B,S,V) logits per device."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, -1)
+    mask = labels[..., None] == jnp.arange(vocab)[None, None]
+    gold = jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
+    loss = (logz - gold).mean()
+    zloss = 1e-4 * jnp.mean(logz ** 2)
+    return loss + zloss
+
+
+def build(cfg) -> dict[str, Callable]:
+    fam = cfg.family
+
+    if fam in ("encdec", "audio"):
+        def init(key):
+            return init_encdec(cfg, key)
+
+        def loss_fn(params, batch):
+            logits, _, aux = forward_encdec(
+                params, cfg, tokens=batch["tokens"], frames=batch["frames"])
+            loss = _ce_loss(logits, batch["labels"], cfg.vocab) + aux
+            return loss, {"ce": loss, "aux": aux}
+
+        def prefill(params, batch):
+            enc = encode(params, batch["frames"], cfg)
+            logits, cache, _ = forward_encdec(
+                params, cfg, tokens=batch["tokens"], encoder_out=enc,
+                make_cache=True)
+            if cfg.prefill_logits == "last":
+                logits = logits[:, -1:]
+            return logits, cache
+
+        def decode(params, cache, batch, pos):
+            logits, cache, _ = forward_encdec(
+                params, cfg, tokens=batch["tokens"], cache=cache,
+                cache_pos=pos)
+            return logits, cache
+
+        return {"init": init, "loss_fn": loss_fn, "prefill": prefill,
+                "decode": decode}
+
+    def init(key):
+        return init_lm(cfg, key)
+
+    def _inputs(batch):
+        kw = {}
+        if "embeds" in batch:
+            kw["embeds"] = batch["embeds"]
+        else:
+            kw["tokens"] = batch["tokens"]
+        if "positions3" in batch:
+            kw["positions3"] = batch["positions3"]
+        return kw
+
+    def loss_fn(params, batch):
+        logits, _, aux = forward_lm(params, cfg, **_inputs(batch))
+        loss = _ce_loss(logits, batch["labels"], cfg.vocab) + aux
+        return loss, {"ce": loss, "aux": aux}
+
+    def prefill(params, batch):
+        logits, cache, _ = forward_lm(
+            params, cfg, **_inputs(batch), make_cache=True,
+            last_logit_only=(cfg.prefill_logits == "last"))
+        return logits, cache
+
+    def decode(params, cache, batch, pos):
+        logits, cache, _ = forward_lm(params, cfg, **_inputs(batch),
+                                      cache=cache, cache_pos=pos)
+        return logits, cache
+
+    return {"init": init, "loss_fn": loss_fn, "prefill": prefill,
+            "decode": decode}

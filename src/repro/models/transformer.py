@@ -1,0 +1,333 @@
+"""Model assembly: scan-over-layer-groups for every assigned family.
+
+A model is a list of *groups*; each group is a unit of sub-layers scanned
+``repeat`` times with stacked parameters (O(1) HLO size in depth — the
+512-device dry-run compiles depend on this).  Units capture each family's
+layer pattern:
+
+  dense        [attn, mlp] × L            (granite/minicpm/qwen2.5/qwen2-vl)
+  gemma2       [local-attn, mlp, global-attn, mlp] × L/2 (+post-norms,
+               softcaps, sliding window)
+  moe          [attn|mla, moe] × L (phi3.5) / leading dense layers (deepseek)
+  ssm (xlstm)  [mlstm × (e-1), slstm] × L/e
+  hybrid       [mamba × e, shared-attn+mlp] × L/e (zamba2: ONE shared
+               attention block's weights reused by every unit)
+  encdec       whisper: encoder groups (non-causal) + decoder groups with
+               cross-attention (see encdec.py)
+
+Caches mirror the group structure: every leaf is stacked (repeat, ...) so
+decode scans carry them positionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attention, init_attention, init_mla, mla
+from .common import dense_init, norm_init, rmsnorm, softcap
+from .mlp import init_mlp, init_moe, mlp, moe
+from .ssm import init_mamba2, init_mamba2_state, mamba2, mamba2_decode
+from .xlstm import (init_mlstm, init_mlstm_state, init_slstm,
+                    init_slstm_state, mlstm, mlstm_decode, slstm,
+                    slstm_decode)
+
+__all__ = ["GroupSpec", "arch_groups", "init_lm", "forward_lm", "init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    unit: tuple[tuple[str, str], ...]   # ((mixer, ffn), ...) per sub-layer
+    repeat: int
+
+
+def arch_groups(cfg) -> list[GroupSpec]:
+    fam = cfg.family
+    L = cfg.n_layers
+    if fam in ("dense", "vlm"):
+        if cfg.local_global:
+            assert L % 2 == 0
+            return [GroupSpec((("attn_local", "mlp"), ("attn", "mlp")),
+                              L // 2)]
+        return [GroupSpec((("attn", "mlp"),), L)]
+    if fam == "moe":
+        mixer = "mla" if cfg.mla else "attn"
+        groups = []
+        if cfg.first_dense:
+            groups.append(GroupSpec(((mixer, "mlp"),), cfg.first_dense))
+        groups.append(GroupSpec(((mixer, "moe"),), L - cfg.first_dense))
+        return groups
+    if fam == "ssm":   # xlstm
+        if cfg.slstm_every:
+            e = cfg.slstm_every
+            assert L % e == 0
+            unit = tuple(("mlstm", "none") for _ in range(e - 1))
+            unit += (("slstm", "none"),)
+            return [GroupSpec(unit, L // e)]
+        return [GroupSpec((("mlstm", "none"),), L)]
+    if fam == "hybrid":  # zamba2
+        e = cfg.hybrid_attn_every
+        assert e and L % e == 0
+        unit = tuple(("mamba", "none") for _ in range(e))
+        unit += (("shared_attn", "mlp"),)
+        return [GroupSpec(unit, L // e)]
+    if fam in ("encdec", "audio"):
+        # decoder-side groups (self-attn -> cross-attn -> mlp);
+        # the encoder stack is assembled by encdec.py
+        return [GroupSpec((("attn", "none"), ("cross_attn", "mlp")), L)]
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(cfg, key, mixer: str, ffn: str) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": norm_init(cfg.d_model)}
+    if mixer in ("attn", "attn_local"):
+        p["attn"] = init_attention(cfg, ks[0])
+    elif mixer == "cross_attn":
+        p["attn"] = init_attention(cfg, ks[0], cross=True)
+    elif mixer == "mla":
+        p["attn"] = init_mla(cfg, ks[0])
+    elif mixer == "mamba":
+        p["mixer"] = init_mamba2(cfg, ks[0])
+    elif mixer == "mlstm":
+        p["mixer"] = init_mlstm(cfg, ks[0])
+    elif mixer == "slstm":
+        p["mixer"] = init_slstm(cfg, ks[0])
+    elif mixer == "shared_attn":
+        pass  # weights live outside the scan (cfg: zamba2)
+    else:
+        raise ValueError(mixer)
+    if ffn != "none":
+        p["ln2"] = norm_init(cfg.d_model)
+    if ffn == "mlp":
+        p["mlp"] = init_mlp(cfg, ks[1])
+    elif ffn == "moe":
+        p["moe"] = init_moe(cfg, ks[1])
+    if cfg.post_norms:
+        p["post_ln1"] = norm_init(cfg.d_model)
+        if ffn != "none":
+            p["post_ln2"] = norm_init(cfg.d_model)
+    return p
+
+
+def init_lm(cfg, key) -> dict:
+    groups = arch_groups(cfg)
+    keys = jax.random.split(key, len(groups) + 3)
+    params: dict[str, Any] = {
+        "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model), scale=0.02),
+        "final_norm": norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab))
+    if cfg.family == "hybrid":
+        params["shared_attn"] = init_attention(cfg, keys[2])
+    for gi, g in enumerate(groups):
+        def init_unit(k):
+            uks = jax.random.split(k, len(g.unit))
+            return [_init_sublayer(cfg, uk, m, f)
+                    for uk, (m, f) in zip(uks, g.unit)]
+        gkeys = jax.random.split(jax.random.fold_in(key, 100 + gi), g.repeat)
+        params[f"group_{gi}"] = jax.vmap(init_unit)(gkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _sublayer_cache(cfg, mixer: str, batch: int, max_len: int,
+                    dtype) -> Optional[dict]:
+    dh = cfg.head_dim
+    if mixer in ("attn", "attn_local", "shared_attn"):
+        return {"k": jnp.zeros((batch, max_len, cfg.n_kv, dh), dtype),
+                "v": jnp.zeros((batch, max_len, cfg.n_kv, dh), dtype)}
+    if mixer == "cross_attn":
+        F = cfg.encoder_frames or 1
+        return {"k": jnp.zeros((batch, F, cfg.n_kv, dh), dtype),
+                "v": jnp.zeros((batch, F, cfg.n_kv, dh), dtype)}
+    if mixer == "mla":
+        return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+                "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+    if mixer == "mamba":
+        return init_mamba2_state(cfg, batch)
+    if mixer == "mlstm":
+        return init_mlstm_state(cfg, batch)
+    if mixer == "slstm":
+        return init_slstm_state(cfg, batch)
+    return None
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> list:
+    """Per-group stacked caches: leaves get a leading (repeat,) dim."""
+    out = []
+    for g in arch_groups(cfg):
+        unit = [_sublayer_cache(cfg, m, batch, max_len, dtype)
+                for (m, f) in g.unit]
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (g.repeat,) + x.shape).copy(),
+            unit)
+        out.append(stacked)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_sublayer(p, x, cfg, mixer, ffn, *, shared, cache, cache_pos,
+                    positions3, encoder_out, make_cache):
+    aux = jnp.float32(0)
+    h = rmsnorm(p["ln1"], x, eps=cfg.norm_eps,
+                zero_centered=cfg.post_norms)
+    if mixer in ("attn", "attn_local"):
+        y, new_cache = attention(
+            p["attn"], h, cfg, layer_local=(mixer == "attn_local"),
+            positions3=positions3, cache=cache, cache_pos=cache_pos,
+            make_cache=make_cache)
+    elif mixer == "cross_attn":
+        y, new_cache = attention(
+            p["attn"], h, cfg, is_cross=True, cross_inputs=encoder_out,
+            cache=cache, cache_pos=cache_pos, make_cache=make_cache)
+    elif mixer == "mla":
+        y, new_cache = mla(p["attn"], h, cfg, cache=cache,
+                           cache_pos=cache_pos, make_cache=make_cache)
+    elif mixer == "shared_attn":
+        # zamba2: ONE attention block's weights reused by every unit
+        # (its kv cache is still per-unit)
+        y, new_cache = attention(
+            shared["attn"], h, cfg, cache=cache, cache_pos=cache_pos,
+            make_cache=make_cache)
+    elif mixer in ("mamba", "mlstm", "slstm"):
+        full = {"mamba": mamba2, "mlstm": mlstm, "slstm": slstm}[mixer]
+        step = {"mamba": mamba2_decode, "mlstm": mlstm_decode,
+                "slstm": slstm_decode}[mixer]
+        if cache_pos is None:
+            if make_cache:   # prefill: full pass + final recurrent state
+                y, new_cache = full(p["mixer"], h, cfg, return_state=True)
+            else:            # train
+                y, new_cache = full(p["mixer"], h, cfg), cache
+        else:                # decode
+            y, new_cache = step(p["mixer"], h, cache, cfg)
+    else:
+        raise ValueError(mixer)
+    if cfg.post_norms:
+        y = rmsnorm(p["post_ln1"], y, eps=cfg.norm_eps, zero_centered=True)
+    x = x + y
+
+    if ffn != "none":
+        h = rmsnorm(p["ln2"], x, eps=cfg.norm_eps,
+                    zero_centered=cfg.post_norms)
+        if ffn == "mlp":
+            y = mlp(p["mlp"], h, cfg)
+        else:
+            y, aux = moe(p["moe"], h, cfg)
+        if cfg.post_norms:
+            y = rmsnorm(p["post_ln2"], y, eps=cfg.norm_eps,
+                        zero_centered=True)
+        x = x + y
+    return x, new_cache, aux
+
+
+def forward_lm(params, cfg, *, tokens=None, embeds=None, cache=None,
+               cache_pos=None, positions3=None, encoder_out=None,
+               make_cache=False, last_logit_only=False):
+    """Returns (logits, new_cache_list, aux_loss)."""
+    from ..runtime.sharding import gather_for_compute, shard_hint
+    dt = jnp.dtype(cfg.dtype)
+    embed_w = gather_for_compute({"embed": params["embed"]},
+                                 cast=dt)["embed"]
+    if embeds is None:
+        x = embed_w.astype(dt)[tokens]
+        if cfg.post_norms:  # gemma-style input scaling
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    else:
+        x = embeds.astype(dt)
+    x = shard_hint(x, "dp", None, None)
+
+    groups = arch_groups(cfg)
+    shared = None
+    if cfg.family == "hybrid":
+        shared = gather_for_compute({"attn": params["shared_attn"]},
+                                    cast=dt)
+
+    new_caches = []
+    aux_total = jnp.float32(0)
+    for gi, g in enumerate(groups):
+        gparams = params[f"group_{gi}"]
+        gcache = cache[gi] if cache is not None else None
+
+        def unit_body(x, up, uc):
+            # ZeRO-3 use-site gather: weights arrive fsdp+tp sharded;
+            # gather the fsdp axes HERE (inside the scan body) so one
+            # layer's worth of gathered weights is live at a time and
+            # matmuls never contract a dp-sharded dim (which would
+            # all-reduce the activations instead).
+            from ..runtime.sharding import gather_for_compute
+            up = gather_for_compute(up, cast=jnp.dtype(cfg.dtype))
+            if cfg.seq_parallel:
+                # sequence parallelism: the residual stream between
+                # blocks is (batch × seq/model) sharded — TP output
+                # all-reduces become reduce-scatters and norms/embed
+                # compute runs seq-sharded (Korthikanti et al.)
+                x = shard_hint(x, "dp", "model", None)
+            auxs = jnp.float32(0)
+            new_uc = []
+            for li, (m, f) in enumerate(g.unit):
+                c = uc[li] if uc is not None else None
+                x, nc, aux = _apply_sublayer(
+                    up[li], x, cfg, m, f, shared=shared, cache=c,
+                    cache_pos=cache_pos, positions3=positions3,
+                    encoder_out=encoder_out,
+                    make_cache=make_cache or cache is not None)
+                new_uc.append(nc)
+                auxs = auxs + aux
+            return x, (new_uc, auxs)
+
+        body = unit_body
+        if cfg.remat == "block":
+            body = jax.checkpoint(unit_body, static_argnums=())
+
+        if gcache is None:
+            scan_body = lambda x, up: body(x, up, None)
+            xs = gparams
+        else:
+            scan_body = lambda x, inp: body(x, inp[0], inp[1])
+            xs = (gparams, gcache)
+
+        if g.repeat == 1:
+            sq = jax.tree_util.tree_map(lambda a: a[0], xs)
+            x, (nc, aux) = scan_body(x, sq)
+            nc = jax.tree_util.tree_map(lambda a: a[None], nc)
+        else:
+            x, (nc, aux) = jax.lax.scan(scan_body, x, xs)
+            aux = aux.sum()
+        new_caches.append(nc)
+        aux_total = aux_total + aux
+
+    if last_logit_only:
+        # serving prefill: only the final position's logits are needed —
+        # slice BEFORE the head matmul (XLA does not reliably push a
+        # post-hoc slice into the (B,S,V) dot; measured §Perf P8)
+        x = x[:, -1:]
+    x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps,
+                zero_centered=cfg.post_norms)
+    if cfg.tie_embeddings:
+        head = embed_w.T.astype(dt)
+    else:
+        head = gather_for_compute(
+            {"lm_head": params["lm_head"]}, cast=dt)["lm_head"].astype(dt)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    # vocab stays TP-sharded through the loss (the CE path is written to
+    # respect it — replicated (B,S,V) logits are a multi-GiB/device bug)
+    logits = shard_hint(logits, "dp", None, "model")
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, (new_caches if (cache is not None or make_cache)
+                    else None), aux_total

@@ -1,0 +1,245 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel/chunked) + sLSTM (scalar
+memory, recurrent).
+
+mLSTM trains in a chunked linear-attention form: exponential input gates
+and log-sigmoid forget gates become per-step log-decays; within a chunk
+the contribution is an attention-like matmul with a cumulative-decay
+mask, across chunks a (H, D, D) matrix state is carried by a scan —
+linear in S, which is what qualifies xlstm-1.3b for the long_500k cell.
+
+Numerics note (documented deviation): the paper's running max-stabilizer
+``m_t`` is omitted (m ≡ 0) so the chunked-parallel and recurrent forms
+are *bit-consistent* (verified in tests); the normalizer keeps the
+paper's ``max(|q·n|, 1)`` guard.  Intra-chunk decays are computed in log
+space, bounded by chunk_len·|log f| + |i|.
+
+sLSTM keeps the paper's scalar-memory recurrence with full stabilizer
+(true lax.scan over time — inherently sequential; placed every
+``cfg.slstm_every`` layers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init
+
+__all__ = ["init_mlstm", "mlstm", "mlstm_decode", "init_mlstm_state",
+           "init_slstm", "slstm", "slstm_decode", "init_slstm_state"]
+
+
+def _mdims(cfg):
+    H = cfg.n_heads
+    D = cfg.d_model // H
+    return H, D
+
+
+def init_mlstm(cfg, key) -> dict:
+    H, D = _mdims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (cfg.d_model, H, D)),
+        "wk": dense_init(ks[1], (cfg.d_model, H, D)),
+        "wv": dense_init(ks[2], (cfg.d_model, H, D)),
+        "wi": dense_init(ks[3], (cfg.d_model, H), scale=0.02),
+        "wf": dense_init(ks[4], (cfg.d_model, H), scale=0.02),
+        "f_bias": 3.0 * jnp.ones((H,), jnp.float32),   # open forget gates
+        "wo": dense_init(ks[5], (H, D, cfg.d_model)),
+        "ogate": dense_init(ks[6], (cfg.d_model, H, D), scale=0.02),
+        "norm": {"scale": jnp.ones((H, D), jnp.float32)},
+    }
+
+
+def _mlstm_gates(params, x):
+    i = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["wi"])
+    f = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["wf"])
+    f = f + params["f_bias"]
+    log_f = -jax.nn.softplus(-f)           # log sigmoid(f)
+    return i, log_f
+
+
+def _headnorm(params, h):
+    var = jnp.mean(jnp.square(h.astype(jnp.float32)), -1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + 1e-6) * params["norm"]["scale"]
+            ).astype(h.dtype)
+
+
+def mlstm(params, x, cfg, *, return_state: bool = False):
+    """Chunked parallel mLSTM. x: (B,S,d) -> (B,S,d) or (y, state)."""
+    H, D = _mdims(cfg)
+    B, S, _ = x.shape
+    dt_ = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt_)) / np.sqrt(D)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt_))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt_))
+    i, log_f = _mlstm_gates(params, x)                    # (B,S,H)
+
+    from .ssm import pick_chunk
+    chunk = pick_chunk(S, cfg.ssm_chunk or 256)
+    nc = S // chunk
+    qc = q.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+    kc = k.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+    vc = v.reshape(B, nc, chunk, H, D).astype(jnp.float32)
+    ic = i.reshape(B, nc, chunk, H)
+    fc = log_f.reshape(B, nc, chunk, H)
+
+    fcum = jnp.cumsum(fc, axis=2)                         # (B,nc,l,H)
+    last = fcum[:, :, -1:, :]
+
+    # intra-chunk: w_tu = exp(fcum_t - fcum_u + i_u), u <= t
+    L = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = (fcum[:, :, :, None, :] - fcum[:, :, None, :, :]
+           + ic[:, :, None, :, :])
+    seg = jnp.where(L[None, None, :, :, None], seg, -jnp.inf)
+    dmat = jnp.exp(seg)                                   # (B,nc,t,u,H)
+    att = jnp.einsum("bcthk,bcuhk->bctuh", qc, kc)
+    y_intra = jnp.einsum("bctuh,bcuhk->bcthk", att * dmat, vc)
+    den_intra = jnp.einsum("bctuh->bcth", att * dmat)
+
+    # inter-chunk states: S_c = sum_u exp(last - fcum_u + i_u) k_u v_u^T
+    dstate = jnp.exp(last - fcum + ic)                    # (B,nc,l,H)
+    states = jnp.einsum("bcuh,bcuhk,bcuhn->bchkn", dstate, kc, vc)
+    nstates = jnp.einsum("bcuh,bcuhk->bchk", dstate, kc)
+    cdecay = jnp.exp(last[:, :, 0, :])                    # (B,nc,H)
+
+    def scan_body(carry, inp):
+        Sm, Sn = carry
+        st, nt, dec = inp
+        return ((Sm * dec[:, :, None, None] + st,
+                 Sn * dec[:, :, None] + nt),
+                (Sm, Sn))                                 # emit PREV state
+
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    (Sfin, nfin), (prevS, prevN) = jax.lax.scan(
+        scan_body, (S0, n0),
+        (states.swapaxes(0, 1), nstates.swapaxes(0, 1),
+         cdecay.swapaxes(0, 1)))
+    prevS = prevS.swapaxes(0, 1)                          # (B,nc,H,D,D)
+    prevN = prevN.swapaxes(0, 1)                          # (B,nc,H,D)
+
+    dq = jnp.exp(fcum)                                    # decay to chunk start
+    y_off = jnp.einsum("bcthk,bcth,bchkn->bcthn", qc, dq, prevS)
+    den_off = jnp.einsum("bcthk,bcth,bchk->bcth", qc, dq, prevN)
+
+    den = jnp.maximum(jnp.abs(den_intra + den_off), 1.0)  # max(|q·n|, 1)
+    y = (y_intra + y_off) / den[..., None]
+    y = y.reshape(B, S, H, D).astype(dt_)
+
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x,
+                                  params["ogate"].astype(dt_)))
+    y = _headnorm(params, y) * o
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dt_))
+    if return_state:
+        return out, {"S": Sfin, "n": nfin}
+    return out
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    H, D = _mdims(cfg)
+    return {"S": jnp.zeros((batch, H, D, D), dtype),
+            "n": jnp.zeros((batch, H, D), dtype)}
+
+
+def mlstm_decode(params, x, state, cfg):
+    """Recurrent mLSTM step (matches the chunked form exactly).
+    x: (B,1,d)."""
+    H, D = _mdims(cfg)
+    dt_ = x.dtype
+    q = jnp.einsum("bd,dhk->bhk", x[:, 0], params["wq"].astype(dt_)) / np.sqrt(D)
+    k = jnp.einsum("bd,dhk->bhk", x[:, 0], params["wk"].astype(dt_))
+    v = jnp.einsum("bd,dhk->bhk", x[:, 0], params["wv"].astype(dt_))
+    i, log_f = _mlstm_gates(params, x)                    # (B,1,H)
+    di = jnp.exp(i[:, 0])
+    df = jnp.exp(log_f[:, 0])
+
+    S_new = (state["S"] * df[:, :, None, None]
+             + jnp.einsum("bhk,bhn->bhkn", k.astype(jnp.float32),
+                          v.astype(jnp.float32)) * di[:, :, None, None])
+    n_new = (state["n"] * df[:, :, None]
+             + k.astype(jnp.float32) * di[:, :, None])
+    num = jnp.einsum("bhk,bhkn->bhn", q.astype(jnp.float32), S_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n_new)),
+        1.0)
+    y = (num / den[:, :, None]).astype(dt_)[:, None]      # (B,1,H,D)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x,
+                                  params["ogate"].astype(dt_)))
+    y = _headnorm(params, y) * o
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dt_))
+    return out, {"S": S_new.astype(state["S"].dtype),
+                 "n": n_new.astype(state["n"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg, key) -> dict:
+    H, D = _mdims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w_zifo": dense_init(ks[0], (d, 4, H, D)),
+        "r_zifo": dense_init(ks[1], (4, H, D, D), scale=0.02),
+        "b_zifo": jnp.zeros((4, H, D), jnp.float32),
+        "wo": dense_init(ks[2], (H, D, d)),
+        "norm": {"scale": jnp.ones((H, D), jnp.float32)},
+    }
+
+
+def init_slstm_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    H, D = _mdims(cfg)
+    z = lambda: jnp.zeros((batch, H, D), dtype)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, H, D), -30.0, dtype)}
+
+
+def _slstm_step(params, xt, st):
+    """One sLSTM step (full stabilizer).  xt: (B,4,H,D) pre-projected."""
+    h_prev = st["h"]
+    rec = jnp.einsum("bhd,ghde->bghe", h_prev.astype(jnp.float32),
+                     params["r_zifo"])
+    g = xt.astype(jnp.float32) + rec + params["b_zifo"]
+    z = jnp.tanh(g[:, 0])
+    i = g[:, 1]                       # exponential input gate (log space)
+    log_f = -jax.nn.softplus(-g[:, 2])
+    o = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(log_f + st["m"], i)
+    di = jnp.exp(i - m_new)
+    df = jnp.exp(log_f + st["m"] - m_new)
+    c_new = df * st["c"] + di * z
+    n_new = df * st["n"] + di
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm(params, x, cfg, *, return_state: bool = False):
+    """Sequential sLSTM over S (lax.scan). x: (B,S,d)."""
+    B, S, _ = x.shape
+    dt_ = x.dtype
+    xg = jnp.einsum("bsd,dghe->bsghe", x, params["w_zifo"].astype(dt_))
+    st0 = init_slstm_state(cfg, B)
+
+    def body(st, xt):
+        st = _slstm_step(params, xt, st)
+        return st, st["h"]
+
+    st_fin, hs = jax.lax.scan(body, st0, xg.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(dt_)                     # (B,S,H,D)
+    y = _headnorm(params, y)
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dt_))
+    if return_state:
+        return out, st_fin
+    return out
+
+
+def slstm_decode(params, x, state, cfg):
+    dt_ = x.dtype
+    xg = jnp.einsum("bsd,dghe->bsghe", x, params["w_zifo"].astype(dt_))
+    st = _slstm_step(params, xg[:, 0], state)
+    y = st["h"].astype(dt_)[:, None]
+    y = _headnorm(params, y)
+    return (jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dt_)),
+            {k: v.astype(state[k].dtype) for k, v in st.items()})

@@ -1,0 +1,111 @@
+"""AdamW (pure JAX, no optax) with global-norm clipping and schedules.
+
+Optimizer state inherits each parameter's sharding (ZeRO-style: params
+are already FSDP+TP sharded by the PartitionSpec rules, so m/v shard
+identically for free — see runtime/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"          # constant | cosine | wsd
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1           # WSD: final decay fraction of run
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """LR schedules incl. MiniCPM's Warmup-Stable-Decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        mult = jnp.float32(1.0)
+    elif cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        mult = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1 - cfg.decay_frac)
+        t = jnp.clip((step - decay_start)
+                     / max(cfg.total_steps - decay_start, 1), 0, 1)
+        mult = 1 - (1 - cfg.min_lr_frac) * t       # stable then linear decay
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * mult
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars (1-D leaves)."""
+    return True
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: dict
+                 ) -> tuple[Any, dict, dict]:
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = jnp.float32(0)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:   # decay matrices only (norms/biases exempt)
+            delta = delta + cfg.weight_decay * p32
+        return (p32 - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    unflat = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return unflat(new_p), {"m": unflat(new_m), "v": unflat(new_v),
+                           "step": step}, metrics

@@ -1,0 +1,271 @@
+"""HLO text cost model with loop-trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE (verified
+empirically — a 10-step scan reports 1/10th the FLOPs), which makes it
+useless for scan-over-layers models.  This module re-derives per-device
+cost by walking the optimized HLO text:
+
+  * ``dot`` FLOPs = 2 · |output| · prod(contracted dims), multiplied by
+    the product of enclosing loop trip counts (from the while op's
+    ``backend_config.known_trip_count``; dynamic-trip loops are counted
+    once and surfaced in ``unknown_trip_whiles``);
+  * collective payloads (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute, incl. -start forms) with
+    replica-group sizes, converted to wire bytes with standard ring
+    factors;
+  * HBM-traffic proxy: Σ (operand + output bytes) over materializing
+    top-level instructions — an upper bound that treats each scheduled
+    instruction's buffers as HBM-resident (fusion internals excluded).
+
+The HLO here is the *per-device* SPMD program, so every figure is
+per-chip; divide nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+from .hw import DTYPE_BYTES
+
+__all__ = ["HloCost", "parse_hlo_cost"]
+
+_COMP_RE = re.compile(
+    r"^(?:ENTRY )?%?([\w.\-]+) \(.*\) -> .+ \{\s*$")
+# shape segment may contain tuple parens and /*index=N*/ comments; the op
+# token is the first bare word immediately followed by '('
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT )?%?([\w.\-]+) = (.*?) ([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# wire-byte multiplier per payload byte for a ring algorithm over N chips
+def _wire_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0          # collective-permute
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+    operands: list[str]
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_payload_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    collectives_by_site: dict = dataclasses.field(default_factory=dict)
+    n_dots: int = 0
+    unknown_trip_whiles: int = 0
+    convolutions: int = 0
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_hbm += other.bytes_hbm * mult
+        self.collective_wire_bytes += other.collective_wire_bytes * mult
+        self.collective_payload_bytes += (other.collective_payload_bytes
+                                          * mult)
+        for k, v in other.collectives.items():
+            e = self.collectives.setdefault(k, [0, 0.0])
+            e[0] += v[0] * mult
+            e[1] += v[1] * mult
+        for k, v in other.collectives_by_site.items():
+            self.collectives_by_site[k] = (
+                self.collectives_by_site.get(k, 0.0) + v * mult)
+        self.n_dots += int(other.n_dots * mult)
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+        self.convolutions += other.convolutions
+
+    def top_sites(self, n: int = 12) -> list[tuple[str, float]]:
+        return sorted(self.collectives_by_site.items(),
+                      key=lambda kv: -kv[1])[:n]
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "iota"}
+
+
+def _parse_computations(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    cur: Optional[str] = None
+    sym: dict[str, str] = {}
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if not m:
+            continue
+        name, shape, op, rest = m.groups()
+        # operand names: %foo references inside the parens (first level)
+        depth, i, args_end = 1, 0, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args_end = i
+                    break
+        operands = re.findall(r"%([\w.\-]+)", rest[:args_end])
+        comps[cur].append(_Instr(name, shape.strip(), op, rest, operands))
+    return comps
+
+
+def parse_hlo_cost(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    entry = None
+    for m in re.finditer(r"^ENTRY %?([\w.\-]+)", text, re.M):
+        entry = m.group(1)
+    if entry is None:  # fall back: last computation
+        entry = list(comps)[-1]
+
+    memo: dict[str, HloCost] = {}
+
+    def comp_cost(cname: str) -> HloCost:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = HloCost()          # cycle guard
+        cost = HloCost()
+        instrs = comps.get(cname, [])
+        sym = {i.name: i.shape for i in instrs}
+
+        for ins in instrs:
+            op = ins.op
+            if op == "dot":
+                out_elems = _shape_elems(ins.shape)
+                lhs_shape = sym.get(ins.operands[0], "") if ins.operands \
+                    else ""
+                cdims = _CONTRACT_RE.search(ins.rest)
+                contracted = 1
+                if cdims and lhs_shape:
+                    m = _SHAPE_RE.search(lhs_shape)
+                    if m and m.group(2):
+                        dims = [int(x) for x in m.group(2).split(",")]
+                        idxs = [int(x) for x in cdims.group(1).split(",")
+                                if x != ""]
+                        for ix in idxs:
+                            if ix < len(dims):
+                                contracted *= dims[ix]
+                cost.flops += 2.0 * out_elems * contracted
+                cost.n_dots += 1
+            elif op == "convolution":
+                cost.convolutions += 1
+            elif op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    cost.unknown_trip_whiles += 1
+                for ref in _CALL_ATTR_RE.findall(ins.rest):
+                    cost.add(comp_cost(ref), trip)
+                continue
+            elif op in ("fusion", "call", "custom-call", "map", "reduce",
+                        "reduce-window", "sort", "scatter", "select-and-scatter"):
+                for ref in _CALL_ATTR_RE.findall(ins.rest):
+                    cost.add(comp_cost(ref), 1.0)
+            elif op == "conditional":
+                br = _BRANCH_RE.search(ins.rest)
+                if br:
+                    subs = re.findall(r"%?([\w.\-]+)", br.group(1))
+                    if subs:
+                        costs = [comp_cost(s) for s in subs]
+                        worst = max(costs, key=lambda c: c.flops)
+                        cost.add(worst, 1.0)
+            elif any(op.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if op.startswith(c))
+                if op.endswith("-done"):
+                    continue
+                payload = _shape_bytes(ins.shape)
+                if kind == "reduce-scatter" and ins.operands:
+                    payload = _shape_bytes(sym.get(ins.operands[0],
+                                                   ins.shape))
+                n = 0
+                g = _GROUPS_RE.search(ins.rest)
+                if g:
+                    n = len([x for x in g.group(1).split(",") if x.strip()])
+                else:
+                    gi = _GROUPS_IOTA_RE.search(ins.rest)
+                    if gi:
+                        n = int(gi.group(2))
+                wire = payload * _wire_factor(kind, max(n, 2))
+                cost.collective_payload_bytes += payload
+                cost.collective_wire_bytes += wire
+                e = cost.collectives.setdefault(kind, [0, 0.0])
+                e[0] += 1
+                e[1] += wire
+                om = _OPNAME_RE.search(ins.rest)
+                site = (om.group(1)[-90:] if om else "?")
+                cost.collectives_by_site[f"{kind} {site}"] = (
+                    cost.collectives_by_site.get(f"{kind} {site}", 0.0)
+                    + wire)
+
+            # HBM-traffic proxy
+            if op not in _SKIP_BYTES and op != "while":
+                b = _shape_bytes(ins.shape)
+                for o in ins.operands:
+                    b += _shape_bytes(sym.get(o, ""))
+                cost.bytes_hbm += b
+
+        memo[cname] = cost
+        return cost
+
+    return comp_cost(entry)

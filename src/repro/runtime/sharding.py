@@ -1,0 +1,338 @@
+"""Sharding rules: parameter-path -> PartitionSpec (FSDP + TP + EP).
+
+Axis roles on the production mesh (launch/mesh.py):
+  "model"          tensor parallelism: attention heads / ffn hidden /
+                   vocab / experts (EP)
+  "data" (+"pod")  data parallelism over the batch AND the FSDP shard
+                   axis for parameter/optimizer-state storage (ZeRO-3:
+                   XLA all-gathers weights per layer on use because the
+                   batch dims are data-sharded)
+
+Rules are name-based over the param pytree paths, so every architecture
+(dense/MoE/MLA/SSM/xLSTM/enc-dec) gets covered by one table; anything
+unmatched stays replicated (norm scales, biases, small gates).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "cache_specs",
+           "fsdp_axes", "logical_rules", "active_mesh", "shard_hint"]
+
+# ---------------------------------------------------------------------------
+# activation sharding hints
+# ---------------------------------------------------------------------------
+_ACTIVE_MESH: list[Optional[Mesh]] = [None]
+
+
+class active_mesh:
+    """Context manager the launcher/dry-run uses so model code can emit
+    with_sharding_constraint hints (no-op when no mesh is active — smoke
+    tests and single-device runs trace the same code unchanged)."""
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _ACTIVE_MESH.append(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _ACTIVE_MESH.pop()
+
+
+def shard_hint(x, *dims: Any):
+    """Constrain activation sharding.  ``dims`` entries: "dp" (the fsdp/
+    batch axes), "model", None, or tuples thereof.  Axes that don't exist
+    on the active mesh or don't divide the dim are dropped."""
+    mesh = _ACTIVE_MESH[-1]
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    parts = []
+    for dim_size, d in zip(x.shape, dims):
+        axes: tuple = ()
+        if d == "dp":
+            axes = fsdp_axes(mesh)
+        elif d is None:
+            parts.append(None)
+            continue
+        elif isinstance(d, str):
+            axes = (d,) if d in names else ()
+        else:
+            axes = tuple(a for a in d if a in names)
+        axes = tuple(a for a in axes if a in names)
+        if not axes:
+            parts.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        parts.append(axes if dim_size % size == 0 and dim_size >= size
+                     else None)
+    spec = P(*parts)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes (pod+data on multi-pod meshes)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def logical_rules(mesh: Mesh) -> list[tuple[str, P]]:
+    """(path-regex, spec) — first match wins.  Regexes are matched against
+    '/'-joined param paths like 'group_0/attn/wq'."""
+    dp = fsdp_axes(mesh)          # e.g. ("data",) or ("pod", "data")
+    d, m = P(dp), "model"
+    return [
+        # embeddings / lm head: vocab on model, d_model on fsdp
+        (r"embed$", P(m, dp)),
+        (r"lm_head$", P(dp, m)),
+        # attention: heads on model, d_model on fsdp
+        (r"attn/wq$", P(dp, m, None)),
+        (r"attn/wk$", P(dp, m, None)),
+        (r"attn/wv$", P(dp, m, None)),
+        (r"attn/wo$", P(m, None, dp)),
+        (r"attn/b[qkv]$", P(m, None)),
+        # MLA: lora dims on model where possible
+        (r"attn/w_dkv$", P(dp, m)),
+        (r"attn/w_kr$", P(dp, None)),
+        (r"attn/w_uk$", P(None, m, None)),
+        (r"attn/w_uv$", P(None, m, None)),
+        (r"attn/w_dq$", P(dp, m)),
+        (r"attn/w_uq$", P(None, m, None)),
+        # dense mlp: hidden on model
+        (r"mlp/w_(up|gate)$", P(dp, m)),
+        (r"mlp/w_down$", P(m, dp)),
+        # MoE: expert parallelism (experts on model), fsdp inside expert
+        (r"moe/router$", P(dp, None)),
+        (r"moe/w_(up|gate)$", P(m, dp, None)),
+        (r"moe/w_down$", P(m, dp, None)),
+        (r"moe/shared/w_(up|gate)$", P(dp, m)),
+        (r"moe/shared/w_down$", P(m, dp)),
+        # mamba2: inner channels on model
+        (r"mixer/w_in$", P(dp, m)),
+        (r"mixer/w_out$", P(m, dp)),
+        (r"mixer/conv$", P(None, m)),
+        # xlstm
+        (r"mixer/w(q|k|v)$", P(dp, m, None)),
+        (r"mixer/wo$", P(m, None, dp)),
+        (r"mixer/ogate$", P(dp, m, None)),
+        (r"mixer/w_zifo$", P(dp, None, m, None)),
+        (r"mixer/r_zifo$", P(None, m, None, None)),
+        # shared attention (zamba2) — same as attn
+        (r"shared_attn/wq$", P(dp, m, None)),
+        (r"shared_attn/wk$", P(dp, m, None)),
+        (r"shared_attn/wv$", P(dp, m, None)),
+        (r"shared_attn/wo$", P(m, None, dp)),
+        # ---- NO head_dim fallbacks.  Two measured refutations
+        # (EXPERIMENTS.md §Perf P3/P12): sharding q/k head_dim all-reduces
+        # (B,H,qc,kc) score blocks (10-50x wire blowup), and sharding v/o
+        # head_dim all-reduces the P·V accumulator inside the chunked
+        # attention backward (74% of qwen2.5 train wire, 3.6 TiB/step).
+        # Archs whose head count doesn't divide the model axis keep
+        # attention weights model-REPLICATED (dp-sharded storage with
+        # ZeRO-3 use-site gather): the honest cost is replicated score
+        # compute, visible in useful_ratio; the production fix is tp=8 or
+        # head padding, out of scope for the assignment-fixed mesh.
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _spec_for(path_str: str, leaf, rules, mesh: Mesh) -> P:
+    """Best-fitting matching rule: rules are tried in order and the first
+    one that survives `_fit` with the most sharded dims wins (fallback
+    rules later in the table cover awkward head counts)."""
+    ndim = len(leaf.shape)
+    best, best_n = P(), 0
+    for rx, spec in rules:
+        if not re.search(rx, path_str):
+            continue
+        parts = list(spec)
+        extra = ndim - len(parts)   # group-stacked leading (repeat,) dim
+        if extra < 0:
+            continue
+        fitted = _fit(P(*([None] * extra + parts)), leaf, mesh)
+        n = sum(1 for p in fitted if p is not None)
+        if n > best_n:
+            best, best_n = fitted, n
+    return best
+
+
+def _fit(spec: P, leaf, mesh: Mesh) -> P:
+    """Drop axis assignments that don't divide the dim (tiny smoke shapes
+    or head counts < mesh axis)."""
+    out = []
+    for dim, ax in zip(leaf.shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(ax if dim % size == 0 and dim >= size else None)
+    return P(*out)
+
+
+def compute_specs(params: Any, mesh: Mesh) -> Any:
+    """Use-site (ZeRO-3 'gathered') specs: the storage spec with the dp
+    axes stripped — weights stay TP-sharded on 'model' but are gathered
+    over the fsdp axes for the matmul."""
+    dp = set(fsdp_axes(mesh))
+
+    def strip(spec: P) -> P:
+        out = []
+        for part in spec:
+            if part is None:
+                out.append(None)
+            elif isinstance(part, str):
+                out.append(None if part in dp else part)
+            else:
+                kept = tuple(a for a in part if a not in dp)
+                out.append(kept if kept else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        strip, param_specs(params, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def gather_for_compute(params: Any, cast=None) -> Any:
+    """ZeRO-3 use-site gather: constrain every weight to its compute spec
+    (model-sharded only).  Called INSIDE the layer scan body so XLA
+    materializes one layer's gathered weights at a time — this is what
+    turns the naive 'partial-sum + all-reduce the activations' lowering
+    into 'all-gather the (much smaller) weights', per-layer.
+
+    ``cast``: compute dtype applied to >=2-D float leaves BEFORE the
+    gather — gathering the bf16 compute copy instead of the f32 master
+    halves the FSDP wire bytes (§Perf P11).  Grads still flow in f32
+    upstream of the cast (standard mixed precision).
+
+    No-op without an active mesh (smoke tests / single device).
+    """
+    mesh = _ACTIVE_MESH[-1]
+    if mesh is None:
+        return params
+    rules = logical_rules(mesh)
+    dp = set(fsdp_axes(mesh))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        spec = _spec_for(_path_str(path), leaf, rules, mesh)
+        parts = []
+        for part in spec:
+            if part is None or (isinstance(part, str) and part in dp):
+                parts.append(None)
+            elif isinstance(part, str):
+                parts.append(part)
+            else:
+                kept = tuple(a for a in part if a not in dp)
+                parts.append(kept if kept else None)
+        if (cast is not None and leaf.ndim >= 2
+                and leaf.dtype == jnp.float32):
+            leaf = leaf.astype(cast)
+        out.append(jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, P(*parts))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    """Pytree of PartitionSpecs matching ``params``."""
+    rules = logical_rules(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_spec_for(_path_str(path), leaf, rules, mesh)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg, mesh: Mesh, batch: Any) -> Any:
+    """Batch arrays: leading batch dim over the DP axes (replicated when
+    the batch doesn't divide, e.g. long_500k's batch=1)."""
+    dp = fsdp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(path, leaf):
+        name = _path_str(path)
+        if name == "positions3":                 # (3, B, S)
+            ok = leaf.shape[1] % dp_size == 0 and leaf.shape[1] >= dp_size
+            return P(None, dp if ok else None, None)
+        ok = leaf.shape[0] % dp_size == 0 and leaf.shape[0] >= dp_size
+        rest = (None,) * (len(leaf.shape) - 1)
+        return P(dp if ok else None, *rest)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])
+
+
+def cache_specs(cfg, mesh: Mesh, cache: Any) -> Any:
+    """Decode-cache sharding.
+
+    KV caches (leaves named k/v/ckv/kr; layout (repeat, B, T, ...)):
+      * batch over DP when divisible, else the SEQUENCE dim takes DP
+        (context-parallel decode — the long_500k batch=1 case);
+      * kv-heads dim over "model" when divisible (GQA often has fewer kv
+        heads than the model axis), else "model" also lands on the
+        sequence dim — attention reduces over T, so XLA inserts one
+        psum over model for the logits, which beats replicating a
+        multi-GiB cache.
+    Recurrent states (ssm/mlstm/slstm): batch over DP, heads over model.
+    """
+    dp = fsdp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    msize = mesh.shape["model"]
+
+    def spec(path, leaf):
+        shp = leaf.shape           # stacked: (repeat, B, ...)
+        parts: list = [None] * len(shp)
+        name = _path_str(path).rsplit("/", 1)[-1]
+        is_kv = name in ("k", "v", "ckv", "kr")
+        if len(shp) < 2:
+            return P(*parts)
+        batch_ok = shp[1] % dp_size == 0 and shp[1] >= dp_size
+        if batch_ok:
+            parts[1] = dp
+        if is_kv and len(shp) >= 3:
+            seq_axes: list = []
+            if not batch_ok:
+                seq_axes.extend(dp)
+            heads_ok = (len(shp) >= 4 and shp[3] % msize == 0
+                        and shp[3] >= msize)
+            if heads_ok:
+                parts[3] = "model"
+            else:
+                seq_axes.append("model")
+            if seq_axes:
+                size = int(np.prod([mesh.shape[a] for a in seq_axes]))
+                if shp[2] % size == 0 and shp[2] >= size:
+                    parts[2] = tuple(seq_axes)
+        else:
+            # recurrent state: try heads dim (index 2) on model
+            if len(shp) >= 3 and shp[2] % msize == 0 and shp[2] >= msize:
+                parts[2] = "model"
+        return P(*parts)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])

@@ -1,0 +1,60 @@
+"""Training step assembly: value_and_grad + AdamW + optional microbatch
+gradient accumulation, built from a registry loss_fn."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["make_train_step", "init_train_state"]
+
+
+def init_train_state(params: Any) -> dict:
+    return adamw_init(params)
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, loss_fn: Callable,
+                    *, microbatches: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``microbatches > 1`` accumulates grads over leading batch
+    splits via lax.scan (activation memory / global batch decoupling)."""
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x, axis=0):
+                b = x.shape[axis]
+                return x.reshape(x.shape[:axis]
+                                 + (microbatches, b // microbatches)
+                                 + x.shape[axis + 1:]).swapaxes(0, axis)
+            # positions3 is (3, B, S): its batch dim is axis 1
+            mb = {k: split(v, 1 if k == "positions3" else 0)
+                  for k, v in batch.items()}
+
+            def acc_body(carry, mbatch):
+                gacc, lacc = carry
+                (l, m), g = grad_fn(params, mbatch)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                return (gacc, lacc + l), m
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics = jax.lax.scan(
+                acc_body, (zero, jnp.float32(0)), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches,
+                                           grads)
+            loss = loss / microbatches
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    return train_step

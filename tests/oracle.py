@@ -1,0 +1,92 @@
+"""Independent brute-force FSM oracle built on networkx isomorphism.
+
+Enumerates every connected edge-subset (up to a size bound) of every
+database graph, groups them by exact labeled isomorphism
+(``networkx.is_isomorphic``), and thresholds on the number of distinct
+database graphs containing each class.  Deliberately shares no code with
+``repro.core`` beyond the Graph container.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Sequence
+
+import networkx as nx
+
+from repro.core.graphdb import Graph
+
+
+def to_nx(g: Graph, edge_subset=None) -> nx.Graph:
+    G = nx.Graph()
+    edges = list(range(g.n_edges)) if edge_subset is None else sorted(edge_subset)
+    for k in edges:
+        u, v = int(g.edges[k][0]), int(g.edges[k][1])
+        G.add_node(u, label=int(g.vlabels[u]))
+        G.add_node(v, label=int(g.vlabels[v]))
+        G.add_edge(u, v, label=int(g.elabels[k]))
+    return G
+
+
+def _node_match(a, b):
+    return a["label"] == b["label"]
+
+
+def _edge_match(a, b):
+    return a["label"] == b["label"]
+
+
+def connected_edge_subsets(g: Graph, max_edges: int) -> list[frozenset[int]]:
+    """All connected edge-subsets of g with 1..max_edges edges."""
+    incident: dict[int, set[int]] = {}
+    for k, (u, v) in enumerate(map(tuple, g.edges)):
+        incident.setdefault(int(u), set()).add(k)
+        incident.setdefault(int(v), set()).add(k)
+
+    seen: set[frozenset[int]] = set()
+    frontier = [frozenset([k]) for k in range(g.n_edges)]
+    seen.update(frontier)
+    out = list(frontier)
+    for _ in range(max_edges - 1):
+        nxt = []
+        for s in frontier:
+            verts = set()
+            for k in s:
+                verts.add(int(g.edges[k][0]))
+                verts.add(int(g.edges[k][1]))
+            grow = set()
+            for v in verts:
+                grow |= incident.get(v, set())
+            for k in grow - s:
+                t = s | {k}
+                if t not in seen:
+                    seen.add(t)
+                    nxt.append(t)
+        out.extend(nxt)
+        frontier = nxt
+    return out
+
+
+def brute_force_frequent(
+    graphs: Sequence[Graph], minsup: int, max_edges: int
+) -> list[tuple[nx.Graph, set[int], int]]:
+    """Returns [(representative_pattern, supporting_graph_ids, n_edges)]."""
+    classes: list[tuple[nx.Graph, set[int], int]] = []
+    for gi, g in enumerate(graphs):
+        for s in connected_edge_subsets(g, max_edges):
+            P = to_nx(g, s)
+            ne = P.number_of_edges()
+            for (Q, ids, qe) in classes:
+                if qe == ne and nx.is_isomorphic(
+                        P, Q, node_match=_node_match, edge_match=_edge_match):
+                    ids.add(gi)
+                    break
+            else:
+                classes.append((P, {gi}, ne))
+    return [(P, ids, ne) for (P, ids, ne) in classes if len(ids) >= minsup]
+
+
+def counts_by_level(freq, max_edges: int) -> list[int]:
+    out = [0] * max_edges
+    for (_, _, ne) in freq:
+        out[ne - 1] += 1
+    return out

@@ -1,0 +1,112 @@
+"""min-dfs-code exactness + canonicality properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dfscode import (array_to_code, code_lt, code_to_array,
+                                code_to_graph, is_canonical, min_dfs_code,
+                                rightmost_path)
+from repro.core.graphdb import Graph, random_db
+
+
+def permute(g: Graph, perm: np.ndarray) -> Graph:
+    """Relabel vertex ids by permutation (labels travel with vertices)."""
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    vl = g.vlabels[inv]
+    edges = perm[g.edges]
+    return Graph(vl, edges, g.elabels)
+
+
+@st.composite
+def small_graphs(draw):
+    n_v = draw(st.integers(2, 7))
+    n_vlab = draw(st.integers(1, 3))
+    n_elab = draw(st.integers(1, 2))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    vl = rng.integers(0, n_vlab, n_v)
+    # random spanning tree + a couple extras
+    edges = set()
+    for i in range(1, n_v):
+        j = int(rng.integers(0, i))
+        edges.add((j, i))
+    for _ in range(draw(st.integers(0, 3))):
+        a, b = rng.integers(0, n_v, 2)
+        if a != b:
+            edges.add((min(int(a), int(b)), max(int(a), int(b))))
+    edges = np.array(sorted(edges), np.int32)
+    el = rng.integers(0, n_elab, len(edges))
+    return Graph(vl, edges, el)
+
+
+@settings(max_examples=150, deadline=None)
+@given(small_graphs(), st.integers(0, 2**31 - 1))
+def test_min_code_invariant_under_relabeling(g, seed):
+    """The canonical key must not depend on vertex ids — the property that
+    makes the MapReduce shuffle key well-defined across partitions."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(g.n_vertices)
+    assert min_dfs_code(g) == min_dfs_code(permute(g, perm))
+
+
+@settings(max_examples=100, deadline=None)
+@given(small_graphs())
+def test_min_code_is_canonical_and_minimal(g):
+    c = min_dfs_code(g)
+    assert is_canonical(c)
+    # code reconstructs an isomorphic graph: same size, same canonical code
+    g2 = code_to_graph(c)
+    assert g2.n_edges == g.n_edges
+    assert min_dfs_code(g2) == c
+
+
+@settings(max_examples=100, deadline=None)
+@given(small_graphs())
+def test_bound_early_exit_consistent(g):
+    c = min_dfs_code(g)
+    assert min_dfs_code(g, bound=c) == c
+
+
+def test_single_edge_code():
+    g = Graph([1, 0], [(0, 1)], [7])
+    assert min_dfs_code(g) == ((0, 1, 0, 7, 1),)
+
+
+def test_triangle_same_labels():
+    g = Graph([0, 0, 0], [(0, 1), (1, 2), (0, 2)], [0, 0, 0])
+    c = min_dfs_code(g)
+    assert c == ((0, 1, 0, 0, 0), (1, 2, 0, 0, 0), (2, 0, 0, 0, 0))
+    assert rightmost_path(c) == (0, 1, 2)
+
+
+def test_paper_fig5_example():
+    """Paper Fig. 5: B-{A,C,D} star.  min code extends A-B with C then D.
+    Labels: A=0,B=1,C=2,D=3.  Expected (per paper §IV-A.2):
+    (1,2,A,B)(2,3,B,C)(2,4,B,D) -> 0-based (0,1,0,_,1)(1,2,1,_,2)(1,3,1,_,3)."""
+    g = Graph([0, 1, 2, 3], [(0, 1), (1, 2), (1, 3)], [0, 0, 0])
+    c = min_dfs_code(g)
+    assert c == ((0, 1, 0, 0, 1), (1, 2, 1, 0, 2), (1, 3, 1, 0, 3))
+
+
+def test_noncanonical_generation_path_rejected():
+    """Paper Fig. 5(b): building the star via A-B-D first is invalid."""
+    bad = ((0, 1, 0, 0, 1), (1, 2, 1, 0, 3), (1, 3, 1, 0, 2))
+    assert not is_canonical(bad)
+
+
+def test_code_array_roundtrip():
+    c = ((0, 1, 0, 0, 1), (1, 2, 1, 0, 2), (2, 0, 2, 1, 0))
+    a = code_to_array(c, 6)
+    assert a.shape == (6, 5)
+    assert array_to_code(a) == c
+
+
+def test_code_lt_total_order_on_sample():
+    g = random_db(5, n_vertices=6, seed=3)
+    codes = [min_dfs_code(x) for x in g]
+    for a in codes:
+        assert not code_lt(a, a)
+        for b in codes:
+            if a != b:
+                assert code_lt(a, b) != code_lt(b, a)

@@ -1,0 +1,78 @@
+"""Sequential baseline miner vs paper toy example + brute-force oracle."""
+import numpy as np
+import pytest
+
+from repro.core.dfscode import code_to_graph, min_dfs_code
+from repro.core.graphdb import paper_toy_db, pubchem_like_db, random_db
+from repro.core.host_miner import mine_host
+
+from oracle import brute_force_frequent, counts_by_level, to_nx, _node_match, _edge_match
+import networkx as nx
+
+
+def test_paper_toy_13_patterns():
+    """Paper Fig. 1: 3 graphs, minsup=2 -> exactly 13 frequent subgraphs."""
+    res = mine_host(paper_toy_db(), minsup=2)
+    assert len(res.frequent) == 13
+    # level structure recovered from the figure: 5 edges, 6 2-edge, 2 3-edge
+    assert [len(l) for l in res.levels] == [5, 6, 2]
+    # the triangle B-D-E (labels B=1, D=3, E=4) must be among them
+    tri = min_dfs_code(
+        code_to_graph(((0, 1, 1, 0, 3), (1, 2, 3, 0, 4), (2, 0, 4, 0, 1))))
+    assert tri in res.frequent
+    assert res.frequent[tri].support == 2
+
+
+def test_paper_toy_frequent_edges():
+    """Paper §IV-C1: frequent edges are A-B, B-C, B-D, D-E, B-E."""
+    res = mine_host(paper_toy_db(), minsup=2)
+    lab = {0: "A", 1: "B", 2: "C", 3: "D", 4: "E"}
+    edges = {(lab[c[0][2]], lab[c[0][4]]) for c in res.levels[0]}
+    assert edges == {("A", "B"), ("B", "C"), ("B", "D"), ("D", "E"), ("B", "E")}
+
+
+@pytest.mark.parametrize("seed,minsup", [(0, 3), (1, 2), (2, 4)])
+def test_vs_bruteforce_small(seed, minsup):
+    graphs = random_db(6, n_vertices=6, vertex_jitter=1, extra_edge_prob=0.4,
+                       n_vlabels=3, n_elabels=2, seed=seed)
+    max_edges = 4
+    res = mine_host(graphs, minsup, max_size=max_edges)
+    oracle = brute_force_frequent(graphs, minsup, max_edges)
+    got = counts_by_level([0] * 0 or oracle, max_edges)
+    mine_counts = [0] * max_edges
+    for lvl, codes in enumerate(res.levels):
+        mine_counts[lvl] = len(codes)
+    assert mine_counts == got, f"per-level counts differ: {mine_counts} vs {got}"
+    # every mined pattern is isomorphic to exactly one oracle class with
+    # identical support
+    for code, info in res.frequent.items():
+        P = to_nx(code_to_graph(code))
+        matches = [ids for (Q, ids, ne) in oracle
+                   if ne == P.number_of_edges() and nx.is_isomorphic(
+                       P, Q, node_match=_node_match, edge_match=_edge_match)]
+        assert len(matches) == 1
+        assert len(matches[0]) == info.support
+
+
+def test_apriori_antimonotone():
+    """support(child) <= support(parent) — the pruning invariant."""
+    graphs = random_db(10, n_vertices=7, extra_edge_prob=0.3, n_vlabels=3,
+                       n_elabels=1, seed=7)
+    res = mine_host(graphs, minsup=2, max_size=4)
+    from repro.core.dfscode import is_canonical
+    for code, info in res.frequent.items():
+        if len(code) == 1:
+            continue
+        parent_graph = code_to_graph(code[:-1])
+        pcode = min_dfs_code(parent_graph)
+        assert pcode in res.frequent, "prefix of frequent must be frequent"
+        assert info.support <= res.frequent[pcode].support
+
+
+def test_molecule_like_runs():
+    graphs = pubchem_like_db(30, seed=1, avg_edges=12)
+    res = mine_host(graphs, minsup=9, max_size=4)
+    assert len(res.levels[0]) > 0
+    # supports are within [minsup, n_graphs]
+    for info in res.frequent.values():
+        assert 9 <= info.support <= 30

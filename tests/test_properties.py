@@ -1,0 +1,62 @@
+"""System-level invariants (hypothesis): the mining result is a pure
+function of the database CONTENT — invariant to graph order, partition
+count, partition scheme, and reduce schedule."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.graphdb import Graph, random_db
+from repro.core.host_miner import mine_host
+from repro.core.mining import Mirage, MirageConfig
+
+
+def canon(res):
+    return sorted((c, s) for c, s in res.supports.items())
+
+
+def canon_host(res):
+    return sorted((c, i.support) for c, i in res.frequent.items())
+
+
+@st.composite
+def small_dbs(draw):
+    n = draw(st.integers(6, 14))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return random_db(n, n_vertices=6, vertex_jitter=1, extra_edge_prob=0.3,
+                     n_vlabels=3, n_elabels=2, seed=seed)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(small_dbs(), st.integers(0, 2**31 - 1))
+def test_invariant_to_graph_order(graphs, seed):
+    minsup = max(2, len(graphs) // 3)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(graphs))
+    shuffled = [graphs[i] for i in perm]
+    a = mine_host(graphs, minsup, max_size=3)
+    b = mine_host(shuffled, minsup, max_size=3)
+    assert canon_host(a) == canon_host(b)
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(small_dbs(), st.sampled_from([1, 2, 4]),
+       st.sampled_from([1, 2]), st.sampled_from(["psum", "reduce_scatter"]))
+def test_invariant_to_partitioning(graphs, parts, scheme, reduce):
+    minsup = max(2, len(graphs) // 3)
+    ref = mine_host(graphs, minsup, max_size=3)
+    cfg = MirageConfig(minsup=minsup, n_partitions=parts, scheme=scheme,
+                       reduce=reduce, max_size=3)
+    res = Mirage(cfg).fit(graphs)
+    assert canon(res) == canon_host(ref)
+
+
+def test_empty_and_degenerate_dbs():
+    # single graph, minsup 1: everything it contains is frequent
+    g = Graph([0, 1, 2], [(0, 1), (1, 2)], [0, 0])
+    res = mine_host([g], 1)
+    assert len(res.frequent) >= 3            # 2 edges + the path
+    # minsup above |G|: nothing is frequent
+    res2 = Mirage(MirageConfig(minsup=5, n_partitions=1)).fit([g])
+    assert sum(res2.counts()) == 0

@@ -1,0 +1,108 @@
+"""Runtime substrate: checkpoint atomicity/elasticity, sharding rules,
+HLO cost parser."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.sharding import shard_hint, active_mesh
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6).reshape(2, 3),
+            "b": [np.float32(1.5), {"c": np.ones((4,), np.int8)}],
+            "scalars": {"x": 3, "y": "name", "z": None, "w": True},
+            "tup": (np.zeros(2), np.ones(3))}
+    p = str(tmp_path / "ck")
+    ckpt.save_pytree(p, tree, metadata={"note": "hi"})
+    got, meta = ckpt.load_pytree(p)
+    assert meta["note"] == "hi"
+    assert np.array_equal(got["a"], tree["a"])
+    assert got["scalars"] == {"x": 3, "y": "name", "z": None, "w": True}
+    assert isinstance(got["tup"], tuple)
+
+
+def test_checkpoint_steps_retention(tmp_path):
+    root = str(tmp_path / "steps")
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save_step(root, s, {"v": np.full(3, s)}, keep=2)
+    assert ckpt.all_steps(root) == [4, 5]
+    tree, meta = ckpt.load_step(root)
+    assert meta["step"] == 5
+    assert tree["v"][0] == 5
+
+
+def test_checkpoint_atomic_overwrite(tmp_path):
+    p = str(tmp_path / "ck")
+    ckpt.save_pytree(p, {"v": np.zeros(3)})
+    ckpt.save_pytree(p, {"v": np.ones(3)})
+    got, _ = ckpt.load_pytree(p)
+    assert got["v"][0] == 1.0
+
+
+def test_shard_hint_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    y = shard_hint(x, "dp", "model")
+    assert y.shape == x.shape
+
+
+def test_param_specs_cover_rules():
+    """Every full-config arch must get model-axis sharding on its big
+    matrices under the production-mesh rules (checked symbolically)."""
+    from repro.launch.mesh import make_production_mesh  # noqa: F401
+    from repro.models.registry import ARCHS, get_config
+    from repro.runtime.sharding import param_specs
+    import jax.sharding as shd
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    from repro.launch.specs import params_specs as psds
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        sds = psds(cfg)
+        specs = param_specs(sds, FakeMesh())
+        flat = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, shd.PartitionSpec))
+        n_model = sum(1 for s in flat
+                      if any("model" in str(p) for p in s if p))
+        n_any = sum(1 for s in flat if any(p is not None for p in s))
+        # every arch fsdp-shards broadly; archs whose head count divides
+        # the 16-way model axis also TP-shard attention (awkward-H archs
+        # deliberately keep attention model-replicated — §Perf P3/P12)
+        assert n_any >= 5, f"{arch}: too few sharded params"
+        assert n_model >= 1, f"{arch}: vocab/ffn must be model-sharded"
+        if cfg.n_heads % 16 == 0 and cfg.n_kv % 16 == 0:
+            assert n_model >= 3, f"{arch}: divisible heads must TP-shard"
+
+
+def test_hlo_parser_scan_and_collectives():
+    from repro.roofline.hlo import parse_hlo_cost
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    x = jnp.ones((64, 128))
+    w = jnp.ones((128, 128))
+    c = parse_hlo_cost(jax.jit(f).lower(x, w).compile().as_text())
+    assert c.flops == 7 * 2 * 64 * 128 * 128
+    assert c.unknown_trip_whiles == 0
+
+
+def test_hlo_parser_counts_fused_dots():
+    from repro.roofline.hlo import parse_hlo_cost
+
+    def f(x, w1, w2):
+        return jax.nn.relu(x @ w1) @ w2
+
+    x, w1, w2 = (jnp.ones((32, 64)), jnp.ones((64, 96)), jnp.ones((96, 16)))
+    c = parse_hlo_cost(jax.jit(f).lower(x, w1, w2).compile().as_text())
+    assert c.flops == 2 * 32 * 64 * 96 + 2 * 32 * 96 * 16

@@ -1,0 +1,65 @@
+"""Dry-run spec layer: input shapes, applicability rules, step mapping."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, cell_applicable, shape_lowers
+from repro.launch.specs import cache_specs_struct, input_specs
+from repro.models.registry import ARCHS, get_config
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert shape_lowers(SHAPES["train_4k"]) == "train_step"
+    assert shape_lowers(SHAPES["decode_32k"]) == "decode_step"
+    assert shape_lowers(SHAPES["long_500k"]) == "decode_step"
+    assert shape_lowers(SHAPES["prefill_32k"]) == "prefill_step"
+
+
+def test_long500k_applicability():
+    runnable = [a for a in ARCHS
+                if cell_applicable(get_config(a), SHAPES["long_500k"])[0]]
+    assert sorted(runnable) == ["qwen2_vl_72b"] or True  # computed below
+    names = sorted(get_config(a).name for a in runnable)
+    assert names == ["xlstm-1.3b", "zamba2-2.7b"], names
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_shapes(arch):
+    cfg = get_config(arch)
+    for sname, shape in SHAPES.items():
+        ok, _ = cell_applicable(cfg, shape)
+        if not ok:
+            continue
+        batch = input_specs(cfg, shape)
+        B = shape.global_batch
+        s_tok = 1 if shape.kind == "decode" else shape.seq_len
+        if cfg.family == "vlm":
+            assert batch["embeds"].shape == (B, s_tok, cfg.d_model)
+            assert batch["positions3"].shape == (3, B, s_tok)
+        else:
+            assert batch["tokens"].shape == (B, s_tok)
+        if shape.kind == "train":
+            assert batch["labels"].shape == (B, shape.seq_len)
+        if cfg.family in ("audio", "encdec") and shape.kind != "decode":
+            assert batch["frames"].shape == (B, cfg.encoder_frames,
+                                             cfg.d_model)
+
+
+@pytest.mark.parametrize("arch", ["qwen2p5_14b", "deepseek_v2_lite",
+                                  "zamba2_2p7b", "xlstm_1p3b",
+                                  "whisper_base"])
+def test_cache_specs_families(arch):
+    cfg = get_config(arch)
+    cache = cache_specs_struct(cfg, SHAPES["decode_32k"])
+    leaves = [l for l in __import__("jax").tree_util.tree_leaves(cache)]
+    assert leaves, "cache must be non-empty"
+    # every kv leaf covers the full cache length
+    if cfg.family == "dense":
+        assert any(l.shape[2] == SHAPES["decode_32k"].seq_len
+                   for l in leaves if l.ndim >= 3)
+    if cfg.mla:
+        assert any(l.shape[-1] == cfg.kv_lora for l in leaves)
