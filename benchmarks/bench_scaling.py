@@ -22,10 +22,10 @@ SNIPPET = textwrap.dedent("""
     from repro.core.graphdb import pubchem_like_db
     from repro.core.mapreduce import MiningMesh
     from repro.core.mining import Mirage, MirageConfig
+    from repro.runtime import jax_compat
 
     w = int(sys.argv[1])
-    mesh = MiningMesh(jax.make_mesh((w,), ("data",),
-                      axis_types=(jax.sharding.AxisType.Auto,)))
+    mesh = MiningMesh(jax_compat.make_mesh((w,), ("data",)))
     graphs = pubchem_like_db(160, seed=0, avg_edges=11)
     cfg = MirageConfig(minsup=0.20, n_partitions=16, max_size=4)
     miner = Mirage(cfg, mesh)

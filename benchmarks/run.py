@@ -1,10 +1,15 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig17,table3]
+    PYTHONPATH=src python -m benchmarks.run [--only fig17,table3] \
+        [--json [BENCH_kernels.json]]
 
-Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  With
+``--json`` the same rows are also written to a machine-readable file
+mapping name -> {us_per_call, derived}, so the perf trajectory can be
+tracked across PRs instead of scraped from stdout.
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -24,24 +29,51 @@ SUITES = {
 }
 
 
+def parse_row(line: str) -> tuple[str, dict]:
+    """Invert common.row: ``name,us_per_call,derived`` -> (name, record).
+
+    Names may contain commas (shape suffixes); derived never does, so
+    split from the right.
+    """
+    name, us, derived = line.rsplit(",", 2)
+    return name, {"us_per_call": float(us), "derived": derived}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated suite-name substrings")
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="also write rows as JSON {name: {us_per_call, "
+                         "derived}} (default path: BENCH_kernels.json)")
     args = ap.parse_args()
     picks = [s for s in args.only.split(",") if s]
 
+    json_file = None
+    if args.json:
+        # open up front: an unwritable path must fail before the (long)
+        # suites run, not after
+        json_file = open(args.json, "w")
+
     print("name,us_per_call,derived")
     failed = []
+    records: dict[str, dict] = {}
     for name, mod in SUITES.items():
         if picks and not any(p in name for p in picks):
             continue
         try:
             for line in mod.run():
                 print(line, flush=True)
+                row_name, rec = parse_row(line)
+                records[row_name] = rec
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if json_file is not None:
+        with json_file:
+            json.dump(records, json_file, indent=2, sort_keys=True)
+        print(f"wrote {len(records)} rows to {args.json}", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

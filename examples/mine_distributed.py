@@ -19,9 +19,9 @@ CHILD = textwrap.dedent(f"""
     from repro.core.graphdb import pubchem_like_db
     from repro.core.mapreduce import MiningMesh
     from repro.core.mining import Mirage, MirageConfig
+    from repro.runtime import jax_compat
 
-    mesh = MiningMesh(jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2))
+    mesh = MiningMesh(jax_compat.make_mesh((2, 4), ("data", "model")))
     graphs = pubchem_like_db(64, seed=11, avg_edges=14)
     cfg = MirageConfig(minsup=0.12, n_partitions=16, scheme=2,
                        reduce="reduce_scatter",

@@ -1,4 +1,4 @@
 """MIRAGE-on-JAX: iterative Map/Reduce frequent subgraph mining as a
-multi-pod TPU framework.  See README.md / DESIGN.md."""
+multi-pod TPU framework.  See DESIGN.md for the architecture."""
 
 __version__ = "0.1.0"

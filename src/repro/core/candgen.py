@@ -24,9 +24,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Sequence
 
+import numpy as np
+
 from .dfscode import Code, Edge5, code_to_graph, is_canonical, rightmost_path
 
-__all__ = ["Extension", "Candidate", "EdgeAlphabet", "generate_candidates"]
+__all__ = ["Extension", "Candidate", "EdgeAlphabet", "generate_candidates",
+           "CandidateSchedule", "schedule_candidates"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,3 +133,97 @@ def generate_candidates(
                                          Extension(True, int(w), n_v,
                                                    (int(vl[w]), e_lab, other))))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Parent-grouped candidate scheduling (fused map-phase feed)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CandidateSchedule:
+    """Tile-aligned candidate order for the fused level kernel.
+
+    Candidates sorted by ``(parent, triple)`` and padded per group so
+    every ``tile_c``-row block shares one parent OL and one edge-OL —
+    the kernel streams those HBM tiles once per *block* instead of once
+    per candidate.  ``inv[i]`` is the scheduled row of canonical
+    candidate ``i``; gathering scheduled outputs with ``inv`` restores
+    canonical order (the permutation round-trip the miner relies on).
+    """
+
+    meta: np.ndarray     # (Cs, 6) int32 [parent, stub, to, fwd, triple, valid]
+    tiles: np.ndarray    # (Cs/tile_c, 2) int32 [parent, triple] per block
+    inv: np.ndarray      # (C,) int32 — scheduled row of canonical candidate i
+    tile_c: int
+
+    @property
+    def n_tiles(self) -> int:
+        return self.tiles.shape[0]
+
+
+def _padded_size(group_sizes: np.ndarray, tc: int) -> int:
+    return int((-(-group_sizes // tc) * tc).sum())
+
+
+def schedule_candidates(meta: np.ndarray, tile_c: int = 8, *,
+                        max_inflation: float = 1.5) -> CandidateSchedule:
+    """Host-side pass: group ``(C, 5)`` candidate metadata into uniform
+    ``(parent, triple)`` tiles of ``tile_c`` rows.
+
+    Stable-sorts by parent (major) then triple (minor), chunks each group
+    into ``tile_c`` blocks, and pads the last block of each group with
+    ``valid=0`` rows carrying the group's own (parent, triple) so block
+    descriptors stay uniform.
+
+    The tile size ADAPTS to the grouping structure: padding inflates the
+    scheduled row count by one partial tile per distinct (parent, triple)
+    pair, and padded rows burn real kernel compute (they are masked, not
+    skipped).  Starting from ``tile_c`` and halving, the largest tile
+    size whose padded row count stays within ``max_inflation``·C is
+    chosen — candidate sets with heavy sibling sharing (the common case:
+    every parent emits one candidate per alphabet partner) get wide
+    blocks and maximal HBM-tile reuse, while adversarially scattered sets
+    degrade gracefully to ``tile_c=1`` (still single-launch, still no
+    (C, G) intermediates) instead of 8×-ing the map-phase work.
+    """
+    meta = np.asarray(meta, np.int32).reshape(-1, 5)
+    C = meta.shape[0]
+    if tile_c < 1:
+        raise ValueError(f"tile_c={tile_c} must be >= 1")
+    if C == 0:                       # emit one fully-padded tile
+        return CandidateSchedule(
+            np.tile(np.asarray([0, 0, 0, 1, 0, 0], np.int32), (tile_c, 1)),
+            np.zeros((1, 2), np.int32), np.empty(0, np.int32), tile_c)
+
+    order = np.lexsort((meta[:, 4], meta[:, 0]))     # triple minor, parent major
+    keys = meta[order][:, [0, 4]]
+    boundaries = np.any(keys[1:] != keys[:-1], axis=1)
+    group_sizes = np.diff(np.concatenate(
+        [[0], np.flatnonzero(boundaries) + 1, [C]]))
+    while tile_c > 1 and _padded_size(group_sizes, tile_c) > max_inflation * C:
+        tile_c = tile_c // 2
+
+    starts = np.cumsum(group_sizes) - group_sizes    # into `order`
+    tiles_per_group = -(-group_sizes // tile_c)
+    padded = tiles_per_group * tile_c
+    offsets = np.cumsum(padded) - padded             # group start row in sched
+    Cs = int(padded.sum())
+
+    group_keys = keys[starts]                        # (n_groups, 2) [parent, triple]
+    tiles = np.repeat(group_keys, tiles_per_group, axis=0)
+
+    sched = np.empty((Cs, 6), np.int32)              # pad rows first …
+    sched[:, [0, 4]] = np.repeat(group_keys, padded, axis=0)
+    sched[:, [1, 2]] = 0
+    sched[:, 3] = 1
+    sched[:, 5] = 0
+    # … then overwrite the leading rows of each group span with the real
+    # candidates (padding sits only at group tails, so every tile_c block
+    # stays within one group)
+    pos = np.repeat(offsets, group_sizes) + (np.arange(C)
+                                             - np.repeat(starts, group_sizes))
+    sched[pos, :5] = meta[order]
+    sched[pos, 5] = 1
+    inv = np.empty(C, np.int32)
+    inv[order] = pos
+    return CandidateSchedule(sched, tiles.astype(np.int32), inv, tile_c)

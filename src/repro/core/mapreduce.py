@@ -36,7 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..kernels.ops import Backend, level_supports
+from ..kernels.ops import (Backend, default_backend, fused_level_supports,
+                           is_fused_backend, level_supports)
+from ..runtime import jax_compat
+from .candgen import schedule_candidates
 from .embedding import materialize_ol, LevelOL
 
 __all__ = ["MiningMesh", "map_reduce_supports", "map_materialize"]
@@ -70,10 +73,7 @@ class MiningMesh:
 
     @staticmethod
     def single_device() -> "MiningMesh":
-        mesh = jax.make_mesh(
-            (1,), ("w",),
-            axis_types=(jax.sharding.AxisType.Auto,))
-        return MiningMesh(mesh)
+        return MiningMesh(jax_compat.make_mesh((1,), ("w",)))
 
 
 def _local_supports_fn(meta, pol, pmask, src, dst, emask, *, backend):
@@ -90,6 +90,27 @@ def _local_supports_fn(meta, pol, pmask, src, dst, emask, *, backend):
     return sup_pp.sum(0), emb_pp.sum(0), emb_pp
 
 
+def _reduce_supports(local_sup, axes, minsup: int, reduce: str):
+    """The shuffle: dense-key aggregation of (C,) local supports."""
+    if reduce == "psum":
+        gsup = jax.lax.psum(local_sup, axes)                      # (C,)
+        verdict = (gsup >= minsup).astype(jnp.int8)
+    elif reduce == "reduce_scatter":
+        # each worker owns a contiguous key shard (C/W keys) —
+        # Hadoop's "reducer owns a key range", as one collective.
+        # Only the 1-byte verdicts are all-gathered; the f32 support
+        # counts stay SHARDED on device (the host reassembles them
+        # lazily when reading the output array).  Wire per key:
+        # (4+1)·(W-1)/W bytes vs psum's 8·(W-1)/W.
+        gsup = jax.lax.psum_scatter(
+            local_sup, axes, scatter_dimension=0, tiled=True)      # (C/W,)
+        v_shard = (gsup >= minsup).astype(jnp.int8)
+        verdict = jax.lax.all_gather(v_shard, axes, axis=0, tiled=True)
+    else:
+        raise ValueError(f"unknown reduce {reduce!r}")
+    return gsup, verdict
+
+
 @functools.lru_cache(maxsize=64)
 def _support_program(mmesh: MiningMesh, minsup: int,
                      backend: Optional[Backend], reduce: str):
@@ -102,36 +123,50 @@ def _support_program(mmesh: MiningMesh, minsup: int,
     def program(meta, pol, pmask, src, dst, emask):
         local_sup, _local_emb, emb_pp = _local_supports_fn(
             meta, pol, pmask, src, dst, emask, backend=backend)
-        if reduce == "psum":
-            gsup = jax.lax.psum(local_sup, axes)                  # (C,)
-            verdict = (gsup >= minsup).astype(jnp.int8)
-        elif reduce == "reduce_scatter":
-            # each worker owns a contiguous key shard (C/W keys) —
-            # Hadoop's "reducer owns a key range", as one collective.
-            # Only the 1-byte verdicts are all-gathered; the f32 support
-            # counts stay SHARDED on device (the host reassembles them
-            # lazily when reading the output array).  Wire per key:
-            # (4+1)·(W-1)/W bytes vs psum's 8·(W-1)/W.
-            gsup = jax.lax.psum_scatter(
-                local_sup, axes, scatter_dimension=0, tiled=True)  # (C/W,)
-            v_shard = (gsup >= minsup).astype(jnp.int8)
-            verdict = jax.lax.all_gather(v_shard, axes, axis=0, tiled=True)
-        else:
-            raise ValueError(f"unknown reduce {reduce!r}")
+        gsup, verdict = _reduce_supports(local_sup, axes, minsup, reduce)
         return gsup, verdict, emb_pp
 
     sup_spec = rep if reduce == "psum" else parts
     # check_vma=False: the varying-axis checker cannot see that a tiled
     # all_gather output is device-invariant; semantics are unchanged.
-    return jax.jit(jax.shard_map(
+    return jax.jit(jax_compat.shard_map(
         program, mesh=mmesh.mesh,
         in_specs=(rep, parts, parts, parts, parts, parts),
         out_specs=(sup_spec, rep, parts), check_vma=False))
 
 
+@functools.lru_cache(maxsize=64)
+def _support_program_fused(mmesh: MiningMesh, minsup: int,
+                           backend: Backend, reduce: str):
+    """Fused map phase: ONE kernel launch per device covers every local
+    partition and every candidate tile (no per-partition vmap, no (C, G)
+    HBM intermediates).  Inputs are in scheduled (parent-grouped) order;
+    the inverse permutation is applied on-device before the collective so
+    the shuffle and the caller both see canonical candidate order."""
+    axes = mmesh.axes
+    parts = mmesh.spec_parts()
+    rep = mmesh.replicated()
+    interpret = backend == "fused_interpret"
+
+    def program(sched_meta, tiles, inv, pol, pmask, src, dst, emask):
+        sup_pp, emb_pp_s = fused_level_supports(
+            sched_meta, tiles, pol, pmask, src, dst, emask,
+            interpret=interpret)                    # (PP, Cs) scheduled
+        local_sup = jnp.take(sup_pp.sum(0), inv)    # (C,) canonical
+        emb_pp = jnp.take(emb_pp_s, inv, axis=1)    # (PP, C) canonical
+        gsup, verdict = _reduce_supports(local_sup, axes, minsup, reduce)
+        return gsup, verdict, emb_pp
+
+    sup_spec = rep if reduce == "psum" else parts
+    return jax.jit(jax_compat.shard_map(
+        program, mesh=mmesh.mesh,
+        in_specs=(rep, rep, rep, parts, parts, parts, parts, parts),
+        out_specs=(sup_spec, rep, parts), check_vma=False))
+
+
 def map_reduce_supports(
     mmesh: MiningMesh,
-    meta: jnp.ndarray,        # (C, 5) replicated
+    meta: np.ndarray,         # (C, 5) host metadata, replicated on device
     pol: jnp.ndarray,         # (NP, P, G, M, K) sharded dim0
     pmask: jnp.ndarray,       # (NP, P, G, M)
     src: jnp.ndarray,         # (NP, T, G, F)
@@ -145,11 +180,23 @@ def map_reduce_supports(
     """One full map+shuffle+reduce support round.
 
     Returns (global_support (C,), frequent_verdict (C,), per-partition
-    embed counts (NP, C)) as host numpy.  C must be padded to a multiple
-    of the worker count for the reduce_scatter variant (mining.py pads).
+    embed counts (NP, C)) as host numpy, in canonical candidate order
+    regardless of backend.  C must be padded to a multiple of the worker
+    count for the reduce_scatter variant (mining.py pads).  The fused
+    backends build the parent-grouped tile schedule here, host-side, so
+    ``meta`` must be concrete (numpy or committed device array).
     """
-    fn = _support_program(mmesh, minsup, backend, reduce)
-    gsup, verdict, emb_pp = fn(meta, pol, pmask, src, dst, emask)
+    backend = backend or default_backend()
+    if is_fused_backend(backend):
+        sched = schedule_candidates(np.asarray(meta))
+        fn = _support_program_fused(mmesh, minsup, backend, reduce)
+        gsup, verdict, emb_pp = fn(
+            jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
+            jnp.asarray(sched.inv), pol, pmask, src, dst, emask)
+    else:
+        fn = _support_program(mmesh, minsup, backend, reduce)
+        gsup, verdict, emb_pp = fn(jnp.asarray(meta), pol, pmask, src,
+                                   dst, emask)
     return (np.asarray(gsup), np.asarray(verdict), np.asarray(emb_pp))
 
 
@@ -168,7 +215,7 @@ def _materialize_program(mmesh: MiningMesh, max_embeddings: int):
         ol, mask, over = jax.vmap(per_part)(pol, pmask, src, dst, emask)
         return ol, mask, jax.lax.psum(over.sum(), axes)
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(jax_compat.shard_map(
         program, mesh=mmesh.mesh,
         in_specs=(rep, parts, parts, parts, parts, parts),
         out_specs=(parts, parts, rep)))

@@ -183,7 +183,7 @@ class Mirage:
 
             t_map = time.perf_counter()
             gsup, verdict, emb_pp = map_reduce_supports(
-                self.mesh, jnp.asarray(meta_p), pol, pmask,
+                self.mesh, meta_p, pol, pmask,
                 src_d, dst_d, emask_d,
                 minsup=minsup, backend=cfg.backend, reduce=cfg.reduce)
             map_secs = time.perf_counter() - t_map

@@ -1,4 +1,10 @@
-"""Pallas TPU kernel: fused per-level embedding join (OL intersection).
+"""Pallas TPU kernel: per-level embedding join (OL intersection).
+
+LEGACY TWO-LAUNCH PATH — this join kernel plus ``support_count.py``'s
+reduction survive as the on-device oracle/fallback (`backend="pallas"`).
+The production map phase is ``fused_level.py``, which performs the join
+AND the per-candidate reduction in one launch, eliminating this
+pipeline's two (C, G) int32 HBM intermediates (DESIGN.md §6).
 
 This is the mapper's inner loop (paper Fig. 7 line 4 / Fig. 6): for every
 candidate c = (parent, stub, to, fwd, triple) and every graph g of the

@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: single-launch fused map phase (join + support).
+
+One ``pallas_call`` covers the whole map-phase compute of a MIRAGE level
+on one device — join *and* per-candidate reduction — replacing the seed
+two-launch pipeline (``embedding_join`` then ``support_count``) that
+round-tripped two full ``(C, G)`` int32 tensors through HBM between
+launches.  See DESIGN.md §5-6 for the traffic argument.
+
+Grid: ``(PP, NT, G/TG)`` with the graph axis innermost.  ``PP`` is the
+device-local partition count, ``NT`` the candidate-*tile* count.  Each
+grid step loads one graph tile of one partition and joins it against a
+block of ``TC = tile_c`` candidates; the per-candidate ``(1, TC)`` output
+block is revisited across the G sweep and accumulated in place (the
+canonical Pallas revisited-output reduction), so per-graph intermediates
+never leave VMEM.
+
+Feeding contract (``core/candgen.schedule_candidates``): candidates are
+parent-grouped — every TC-row block shares one ``(parent, triple)`` pair,
+recorded in the scalar-prefetched block-descriptor table ``tiles``.  The
+data-dependent BlockSpec index maps stream the block's shared parent-OL
+and edge-OL tiles from HBM **once per block** instead of once per
+candidate (the seed kernel's grid was per-candidate).  Padded rows carry
+``valid=0`` in meta column 5 and contribute zero.
+
+Shapes (one device):
+  sched_meta (Cs, 6) int32  [parent, stub, to, fwd, triple, valid]
+  tiles      (NT, 2) int32  [parent, triple] per candidate block
+  pol        (PP, P, G, M, K) int32   stacked parent OLs, PAD = -1
+  pmask      (PP, P, G, M)    int8    embedding validity
+  src/dst    (PP, T, G, F)    int32   edge-OL endpoints
+  emask      (PP, T, G, F)    int8
+
+Outputs (scheduled candidate order — gather with ``schedule.inv`` to
+restore canonical order):
+  sup (PP, Cs) int32 — per-partition local support
+  emb (PP, Cs) int32 — per-partition embedding count (cost signal)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_level_pallas", "DEFAULT_TILE_C"]
+
+DEFAULT_TILE_C = 8
+
+
+def _fused_kernel(meta_ref, tiles_ref, pol_ref, pmask_ref, src_ref, dst_ref,
+                  emask_ref, sup_ref, emb_ref, *, tile_c):
+    ct = pl.program_id(1)
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
+    def _init():
+        sup_ref[...] = jnp.zeros_like(sup_ref)
+        emb_ref[...] = jnp.zeros_like(emb_ref)
+
+    pol = pol_ref[0, 0]          # (TG, M, K) int32 — block's shared parent
+    pmask = pmask_ref[0, 0]      # (TG, M) int8
+    src = src_ref[0, 0]          # (TG, F) int32 — block's shared triple
+    dst = dst_ref[0, 0]          # (TG, F) int32
+    emask = emask_ref[0, 0]      # (TG, F) int8
+    tg, m, k = pol.shape
+    f = src.shape[-1]
+
+    kids = jax.lax.broadcasted_iota(jnp.int32, (tg, m, k), 2)
+    pair_ok = (pmask[:, :, None] != 0) & (emask[:, None, :] != 0)
+
+    # forward-edge membership test (new endpoint must not be a parent
+    # vertex) depends only on (pol, dst) — computed ONCE per block and
+    # shared by all tile_c candidates, where the per-candidate grid paid
+    # the O(M·F·K) loop per candidate.
+    def body(kk, acc):
+        col = jax.lax.dynamic_index_in_dim(pol, kk, axis=2, keepdims=False)
+        return acc | (dst[:, None, :] == col[:, :, None])
+
+    member = jax.lax.fori_loop(
+        0, k, body, jnp.zeros((tg, m, f), jnp.bool_))
+
+    sups, embs = [], []
+    for i in range(tile_c):      # static unroll — TC is a compile constant
+        row = ct * tile_c + i
+        stub = meta_ref[row, 1]
+        to = meta_ref[row, 2]
+        fwd = meta_ref[row, 3]
+        valid = meta_ref[row, 5]
+
+        stub_vals = jnp.sum(jnp.where(kids == stub, pol, 0), axis=-1)  # (TG,M)
+        to_vals = jnp.sum(jnp.where(kids == to, pol, 0), axis=-1)      # (TG,M)
+        ok = (src[:, None, :] == stub_vals[:, :, None]) & pair_ok      # (TG,M,F)
+        ok &= jnp.where(fwd == 1, ~member,
+                        dst[:, None, :] == to_vals[:, :, None])
+        sups.append(jnp.sum(ok.any(axis=(1, 2)).astype(jnp.int32)) * valid)
+        embs.append(ok.sum(dtype=jnp.int32) * valid)
+
+    sup_ref[0] += jnp.stack(sups)
+    emb_ref[0] += jnp.stack(embs)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_g", "interpret"))
+def fused_level_pallas(
+    sched_meta: jnp.ndarray,   # (Cs, 6) int32, Cs = NT * tile_c
+    tiles: jnp.ndarray,        # (NT, 2) int32
+    pol: jnp.ndarray,          # (PP, P, G, M, K) int32
+    pmask: jnp.ndarray,        # (PP, P, G, M) int8/bool
+    src: jnp.ndarray,          # (PP, T, G, F) int32
+    dst: jnp.ndarray,          # (PP, T, G, F) int32
+    emask: jnp.ndarray,        # (PP, T, G, F) int8/bool
+    *,
+    tile_g: int,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-launch level supports.  G must be a multiple of ``tile_g``
+    (ops.py owns the padding contract); ``tile_c`` is implied by the
+    schedule (Cs / NT)."""
+    Cs = sched_meta.shape[0]
+    NT = tiles.shape[0]
+    tile_c = Cs // NT
+    if Cs != NT * tile_c:
+        raise ValueError(f"Cs={Cs} not a multiple of NT={NT}")
+    PP, P, G, M, K = pol.shape
+    _, T, _, F = src.shape
+    if G % tile_g:
+        raise ValueError(f"G={G} not a multiple of tile_g={tile_g}")
+    n_g = G // tile_g
+
+    pmask = pmask.astype(jnp.int8)
+    emask = emask.astype(jnp.int8)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(PP, NT, n_g),
+        in_specs=[
+            pl.BlockSpec((1, 1, tile_g, M, K),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 0],
+                                                         g, 0, 0)),
+            pl.BlockSpec((1, 1, tile_g, M),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 0],
+                                                         g, 0)),
+            pl.BlockSpec((1, 1, tile_g, F),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 1],
+                                                         g, 0)),
+            pl.BlockSpec((1, 1, tile_g, F),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 1],
+                                                         g, 0)),
+            pl.BlockSpec((1, 1, tile_g, F),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 1],
+                                                         g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_c),
+                         lambda pp, ct, g, meta, tiles: (pp, ct)),
+            pl.BlockSpec((1, tile_c),
+                         lambda pp, ct, g, meta, tiles: (pp, ct)),
+        ],
+    )
+    sup, emb = pl.pallas_call(
+        functools.partial(_fused_kernel, tile_c=tile_c),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((PP, Cs), jnp.int32),
+            jax.ShapeDtypeStruct((PP, Cs), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sched_meta, tiles, pol, pmask, src, dst, emask)
+    return sup, emb

@@ -1,12 +1,17 @@
 """Jit'd dispatch wrappers around the mining kernels.
 
 ``backend`` selection:
-  "ref"       pure-jnp (XLA) — default on CPU, also the test oracle
-  "pallas"    compiled Pallas TPU kernels — production TPU path
-  "interpret" Pallas kernels in interpret mode — CPU validation of the
-              exact kernel bodies (slow; tests only)
+  "ref"             pure-jnp (XLA) — default on CPU, also the test oracle
+  "fused"           single-launch fused Pallas map phase — production TPU
+                    path (join + per-candidate reduction in one kernel,
+                    parent-grouped candidate schedule; DESIGN.md §5-6)
+  "fused_interpret" the fused kernel in interpret mode — CPU validation
+  "pallas"          legacy two-launch Pallas pipeline (join kernel, (C,G)
+                    HBM intermediates, then reduce kernel) — kept as the
+                    on-device oracle/fallback for the fused path
+  "interpret"       the two-launch pipeline in interpret mode
 
-The wrapper owns the padding contract: G is padded to the graph tile and
+The wrappers own the padding contract: G is padded to the graph tile and
 C to the candidate tile with masked-off rows, so kernel callers never see
 alignment requirements.
 """
@@ -20,16 +25,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from .embedding_join import DEFAULT_TILE_G, embedding_join_pallas
+from .fused_level import DEFAULT_TILE_C, fused_level_pallas
 from .ref import embedding_join_ref, support_count_ref
 from .support_count import support_count_pallas
 
-Backend = Literal["ref", "pallas", "interpret"]
+Backend = Literal["ref", "pallas", "interpret", "fused", "fused_interpret"]
 
-__all__ = ["level_supports", "default_backend"]
+__all__ = ["level_supports", "fused_level_supports", "default_backend",
+           "is_fused_backend"]
 
 
 def default_backend() -> Backend:
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return "fused" if jax.default_backend() == "tpu" else "ref"
+
+
+def is_fused_backend(backend: Backend | None) -> bool:
+    return (backend or default_backend()) in ("fused", "fused_interpret")
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
@@ -42,6 +53,36 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
     return jnp.pad(x, widths, constant_values=value)
 
 
+def fused_level_supports(
+    sched_meta: jnp.ndarray,   # (Cs, 6) int32 — schedule_candidates output
+    tiles: jnp.ndarray,        # (NT, 2) int32 block descriptors
+    pol: jnp.ndarray,          # (PP, P, G, M, K) int32
+    pmask: jnp.ndarray,        # (PP, P, G, M) bool/int8
+    src: jnp.ndarray,          # (PP, T, G, F) int32
+    dst: jnp.ndarray,
+    emask: jnp.ndarray,
+    *,
+    tile_g: int = DEFAULT_TILE_G,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(partition, scheduled-candidate) (support, embed_count) in ONE
+    kernel launch covering every device-local partition.
+
+    Outputs are in scheduled order — gather with ``schedule.inv`` for
+    canonical order.  Owns graph-axis padding (padded graphs carry zero
+    masks, contributing nothing).
+    """
+    G = pol.shape[2]
+    tg = min(tile_g, _round_up(G, 8))
+    polp = _pad_to(pol, 2, tg, value=-1)
+    pmaskp = _pad_to(pmask.astype(jnp.int8), 2, tg)
+    srcp = _pad_to(src, 2, tg, value=-1)
+    dstp = _pad_to(dst, 2, tg, value=-1)
+    emaskp = _pad_to(emask.astype(jnp.int8), 2, tg)
+    return fused_level_pallas(sched_meta, tiles, polp, pmaskp, srcp, dstp,
+                              emaskp, tile_g=tg, interpret=interpret)
+
+
 def level_supports(
     meta: jnp.ndarray,     # (C, 5) int32
     pol: jnp.ndarray,      # (P, G, M, K) int32
@@ -52,12 +93,16 @@ def level_supports(
     *,
     backend: Backend | None = None,
     tile_g: int = DEFAULT_TILE_G,
-    tile_c: int = 8,
+    tile_c: int = DEFAULT_TILE_C,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Per-candidate (local_support, embed_count) for one level.
 
     This is the whole map-phase compute of a MIRAGE iteration on one
-    partition: join + reduce, fused across all candidates.
+    partition: join + reduce, fused across all candidates.  The fused
+    backends build the parent-grouped schedule host-side, so ``meta``
+    must be concrete (not a tracer) for them — the distributed driver
+    (`core/mapreduce.py`) schedules once per level and calls
+    ``fused_level_supports`` directly instead.
     """
     backend = backend or default_backend()
     C = meta.shape[0]
@@ -66,6 +111,16 @@ def level_supports(
     if backend == "ref":
         matched, count = embedding_join_ref(meta, pol, pmask, src, dst, emask)
         return support_count_ref(matched, count)
+
+    if backend in ("fused", "fused_interpret"):
+        from ..core.candgen import schedule_candidates
+        sched = schedule_candidates(np.asarray(meta), tile_c)
+        sup, emb = fused_level_supports(
+            jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
+            pol[None], pmask[None], src[None], dst[None], emask[None],
+            tile_g=tile_g, interpret=(backend == "fused_interpret"))
+        inv = jnp.asarray(sched.inv)
+        return jnp.take(sup[0], inv), jnp.take(emb[0], inv)
 
     interpret = backend == "interpret"
     # pad graphs axis; padded graphs carry zero masks -> no contribution

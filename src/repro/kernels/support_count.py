@@ -1,5 +1,9 @@
 """Pallas TPU kernel: per-candidate support reduction.
 
+LEGACY TWO-LAUNCH PATH — second launch of the oracle/fallback pipeline
+(`backend="pallas"`); the production path is ``fused_level.py``, which
+never materializes this kernel's (C, G) inputs (DESIGN.md §6).
+
 Reduces the join kernel's per-graph outputs to per-candidate scalars:
 
   support[c] = sum_g matched[c, g]      (# graphs containing the child)

@@ -13,6 +13,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from ..runtime import jax_compat
+
 __all__ = ["make_production_mesh", "make_mesh", "worker_count"]
 
 
@@ -30,10 +32,7 @@ def make_mesh(shape, axes) -> Mesh:
             f"mesh {shape} needs {n} devices, have {len(devs)} — the "
             f"dry-run must set XLA_FLAGS=--xla_force_host_platform_"
             f"device_count={n} before importing jax")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devs[:n])
+    return jax_compat.make_mesh(shape, axes, devices=devs[:n])
 
 
 def worker_count(mesh: Mesh) -> int:

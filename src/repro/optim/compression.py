@@ -71,6 +71,7 @@ def make_train_step_ddp(cfg, opt_cfg, loss_fn, mesh, *,
     compressed) psum.  This is the trainer variant whose collective
     schedule we own end-to-end — the gradient-compression testbed."""
     from ..optim.adamw import adamw_update
+    from ..runtime import jax_compat
     from jax.sharding import PartitionSpec as P
 
     axes = tuple(mesh.axis_names)
@@ -89,7 +90,7 @@ def make_train_step_ddp(cfg, opt_cfg, loss_fn, mesh, *,
 
     rep = P()
     batch_spec = P(axes)
-    return jax.jit(jax.shard_map(
+    return jax.jit(jax_compat.shard_map(
         step, mesh=mesh,
         in_specs=(rep, rep, rep, batch_spec),
         out_specs=(rep, rep, rep, rep),

@@ -1,6 +1,8 @@
 """min-dfs-code exactness + canonicality properties (hypothesis)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dfscode import (array_to_code, code_lt, code_to_array,

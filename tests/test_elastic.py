@@ -14,14 +14,14 @@ SNIPPET = textwrap.dedent("""
     from repro.core.host_miner import mine_host
     from repro.core.mapreduce import MiningMesh
     from repro.core.mining import Mirage, MirageConfig
+    from repro.runtime import jax_compat
 
     ck = sys.argv[1]
     graphs = pubchem_like_db(48, seed=21, avg_edges=10)
     ref = mine_host(graphs, 12, max_size=4)
 
     def mesh(w):
-        return MiningMesh(jax.make_mesh((w,), ("w",),
-                          axis_types=(jax.sharding.AxisType.Auto,)))
+        return MiningMesh(jax_compat.make_mesh((w,), ("w",)))
 
     # phase 1: run 2 levels on 4 workers, checkpointing
     cfg = MirageConfig(minsup=12, n_partitions=16, max_size=2,

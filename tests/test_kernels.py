@@ -3,8 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # property sweep skipped; fixed-shape tests still run
+    HAVE_HYPOTHESIS = False
 
 from repro.core.candgen import generate_candidates
 from repro.core.embedding import build_edge_ol, candidate_meta, level1_ol
@@ -99,15 +104,16 @@ def test_ops_wrapper_interpret_vs_ref_end_to_end():
     assert sup_by_code[abe] == 1
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.integers(1, 10), st.integers(1, 24))
-def test_join_kernel_property_sweep(seed, c, g):
-    rng = np.random.default_rng(seed)
-    args = _random_level(rng, C=c, P=3, G=g, M=4, K=3, T=3, F=5)
-    m_ref, c_ref = embedding_join_ref(*args)
-    meta, pol, pmask, src, dst, emask = args
-    m_k, c_k = embedding_join_pallas(
-        meta, pol, pmask.astype(jnp.int8), src, dst,
-        emask.astype(jnp.int8), tile_g=g, interpret=True)
-    assert_allclose(np.asarray(m_k), np.asarray(m_ref))
-    assert_allclose(np.asarray(c_k), np.asarray(c_ref))
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 10), st.integers(1, 24))
+    def test_join_kernel_property_sweep(seed, c, g):
+        rng = np.random.default_rng(seed)
+        args = _random_level(rng, C=c, P=3, G=g, M=4, K=3, T=3, F=5)
+        m_ref, c_ref = embedding_join_ref(*args)
+        meta, pol, pmask, src, dst, emask = args
+        m_k, c_k = embedding_join_pallas(
+            meta, pol, pmask.astype(jnp.int8), src, dst,
+            emask.astype(jnp.int8), tile_g=g, interpret=True)
+        assert_allclose(np.asarray(m_k), np.asarray(m_ref))
+        assert_allclose(np.asarray(c_k), np.asarray(c_ref))

@@ -100,8 +100,8 @@ MULTIDEV_SNIPPET = textwrap.dedent("""
     from repro.core.mining import Mirage, MirageConfig
 
     assert jax.device_count() == 8
-    mesh = MiningMesh(jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2))
+    from repro.runtime import jax_compat
+    mesh = MiningMesh(jax_compat.make_mesh((2, 4), ("data", "model")))
     graphs = pubchem_like_db(48, seed=7, avg_edges=10)
     ref = mine_host(graphs, 12, max_size=4)
     for reduce in ("psum", "reduce_scatter"):

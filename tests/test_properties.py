@@ -3,6 +3,8 @@ function of the database CONTENT — invariant to graph order, partition
 count, partition scheme, and reduce schedule."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core.graphdb import Graph, random_db
