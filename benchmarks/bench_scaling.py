@@ -1,10 +1,18 @@
-"""Paper Fig. 18: runtime and speedup vs number of workers.
+"""Paper Fig. 18: runtime and speedup vs number of workers, plus the
+per-level pipeline comparison (single-sync device-resident level program
+vs the PR-1 two-program driver).
 
 Workers are simulated host devices (subprocess per count so jax re-inits
 with the right device pool).  The paper's Yeast/20% setup maps to the
 yeast-like dataset; speedup is reported relative to the smallest count.
 The absolute CPU numbers are not TPU predictions — the *shape* (near-
 linear until partition granularity binds) is the reproduction.
+
+The pipeline row measures steady-state (jit-warm) per-level wall time:
+each pipeline mines the same database twice in-process and the second
+run's mean level time is reported — level shapes recur across runs, so
+this isolates the per-iteration dispatch/sync/compute cost the
+single-sync program exists to cut (DESIGN.md §8).
 """
 import json
 import os
@@ -36,6 +44,36 @@ SNIPPET = textwrap.dedent("""
 """)
 
 
+PIPELINE_SNIPPET = textwrap.dedent("""
+    import os, sys, json, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    from repro.core.graphdb import pubchem_like_db
+    from repro.core.mapreduce import MiningMesh
+    from repro.core.mining import Mirage, MirageConfig
+    from repro.runtime import jax_compat
+
+    mesh = MiningMesh(jax_compat.make_mesh((4,), ("data",)))
+    graphs = pubchem_like_db(160, seed=0, avg_edges=11)
+    result = {}
+    counts = {}
+    for pipeline in ("legacy", "single_sync"):
+        best = float("inf")
+        for i in range(4):          # run 0 compiles; best-of-3 warm
+            cfg = MirageConfig(minsup=0.10, n_partitions=16, max_size=7,
+                               pipeline=pipeline)
+            res = Mirage(cfg, mesh).fit(graphs)
+            per_level = sum(s.seconds for s in res.stats) / len(res.stats)
+            if i > 0:
+                best = min(best, per_level)
+        result[pipeline] = best
+        counts[pipeline] = sum(res.counts())
+    assert counts["legacy"] == counts["single_sync"], counts
+    result["frequent"] = counts["single_sync"]
+    print(json.dumps(result))
+""")
+
+
 def run() -> list[str]:
     out = []
     base = None
@@ -53,4 +91,14 @@ def run() -> list[str]:
         out.append(row(f"fig18/workers={w}", d["secs"],
                        f"speedup={base / d['secs']:.2f}x"
                        f";frequent={d['frequent']}"))
+
+    r = subprocess.run([sys.executable, "-c", PIPELINE_SNIPPET],
+                       capture_output=True, text=True, env=env,
+                       timeout=1800)
+    assert r.returncode == 0, r.stderr[-1500:]
+    d = json.loads(r.stdout.strip().splitlines()[-1])
+    out.append(row("fig18/level_pipeline_single_sync_w4", d["single_sync"],
+                   f"legacy_us={d['legacy'] * 1e6:.0f}"
+                   f";speedup={d['legacy'] / d['single_sync']:.2f}x"
+                   f";frequent={d['frequent']}"))
     return out

@@ -1,0 +1,321 @@
+"""Single-sync device-resident level program (DESIGN.md §8).
+
+The PR-1 driver still crossed the host↔device boundary several times per
+mining level: fetch the support vector, build a Python ``keep`` list,
+re-upload the survivor metadata, loop the escalation valve from host
+control flow, and detour through the host to compute the LPT straggler
+repack from the embed-count signal.  Each crossing is a device sync — the
+iterative-MapReduce overhead the paper identifies (§IV-B) surviving in
+miniature as dispatch latency.
+
+This module fuses the whole per-level dataflow into ONE jitted program:
+
+  1. pass-1 support counting   (fused single-launch kernel, or the
+                                vmapped ref/pallas backends, per device)
+  2. dense-collective threshold (psum | reduce_scatter — the shuffle)
+  3. survivor compaction        (verdict-masked prefix-sum rank, one
+                                scatter; survivor metadata gathered to
+                                the front, padded to a static cap S)
+  4. pass-2 materialization     (child OLs for the S compact slots,
+                                data-local per partition)
+  5. straggler repack           (per-partition embed-cost → on-device
+                                LPT permutation + trigger decision; the
+                                permutation rides home in the wire and,
+                                when it fired, ``permute_stores`` gathers
+                                the OL + edge-OL stores into the new
+                                layout in a separate cached device
+                                program — no host detour, and the rare
+                                all-to-all doesn't tax every level's
+                                compile)
+
+The host receives exactly ONE device→host transfer per level: the packed
+int32 *wire* vector
+
+  [0:Cp]   global support per (padded) candidate
+  [Cp+0]   true survivor count (may exceed the cap S — driver retries)
+  [Cp+1]   overflow (matches dropped by the M cap, survivors only)
+  [Cp+2]   rebalanced flag (0/1)
+  [Cp+3]   imbalance, 16.16 fixed point
+  [Cp+4:]  the (NP,) partition permutation that was applied
+
+and derives everything else (frequent verdicts, survivor ids, escalation
+and rebalance bookkeeping) host-side from it.
+
+Exceptional paths — the escalation valve (overflow > 0) and a survivor-
+cap miss (n_keep > S) — fall back to the cheap materialize-only program
+from the *preserved* inputs (the wire's pass-1 supports stay valid); they
+cost extra syncs only when they fire.  Because such a retry consumes the
+parent OL store again, its buffers are donated only when no retry is
+possible: escalation disabled or M already at its ceiling, and S at its
+Cp maximum.  Donation here releases the parent store at program exit
+(the child store's shapes differ every level, so XLA cannot alias the
+buffers and warns); real input-output aliasing happens in
+``permute_stores``, whose outputs match its inputs exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from ..kernels.ops import (Backend, device_local_supports,
+                           fused_level_supports, is_fused_backend)
+from ..runtime import jax_compat
+from .embedding import LevelOL, materialize_one
+from .mapreduce import MiningMesh, reduce_supports
+
+__all__ = ["LevelWire", "LevelOutputs", "run_level", "unpack_wire",
+           "lpt_permutation"]
+
+_IMBAL_FX = 1 << 16
+
+
+@dataclasses.dataclass
+class LevelWire:
+    """Host view of the single per-level transfer."""
+
+    gsup: np.ndarray        # (C,) int32 — global supports, canonical order
+    n_keep: int             # true survivor count (may exceed the cap)
+    overflow: int           # matches dropped by the M cap (survivors only)
+    rebalanced: bool
+    imbalance: float
+    perm: np.ndarray        # (NP,) applied partition permutation
+
+
+@dataclasses.dataclass
+class LevelOutputs:
+    """Device-resident results of one level program invocation.  The
+    edge store passes through untouched; when the wire reports a
+    rebalance the driver repacks everything via ``permute_stores``."""
+
+    wire: LevelWire
+    pol: jnp.ndarray        # (NP, S, G, M, K+1) — compact survivor OLs
+    pmask: jnp.ndarray      # (NP, S, G, M)
+    src: jnp.ndarray        # (NP, T, G, F) — edge store (as passed in)
+    dst: jnp.ndarray
+    emask: jnp.ndarray
+
+
+def lpt_permutation(cost: jnp.ndarray, n_workers: int) -> jnp.ndarray:
+    """Device LPT repack: heaviest partition first onto the lightest
+    worker bucket with room; emits the permutation laying buckets
+    contiguously (matching the blocked dim-0 sharding).  The device twin
+    of ``mining._lpt_order`` — NP is tiny, so the sequential fori_loop
+    is noise next to the level compute it rides along with."""
+    npn = cost.shape[0]
+    per = npn // n_workers
+    order = jnp.argsort(-cost)
+
+    def body(i, state):
+        load, cnt, pos = state
+        item = order[i]
+        bucket_key = jnp.where(cnt < per, load, jnp.inf)
+        b = jnp.argmin(bucket_key)
+        pos = pos.at[b * per + cnt[b]].set(item.astype(jnp.int32))
+        load = load.at[b].add(cost[item])
+        cnt = cnt.at[b].add(1)
+        return load, cnt, pos
+
+    _, _, pos = jax.lax.fori_loop(
+        0, npn, body,
+        (jnp.zeros((n_workers,), cost.dtype),
+         jnp.zeros((n_workers,), jnp.int32),
+         jnp.zeros((npn,), jnp.int32)))
+    return pos
+
+
+@functools.lru_cache(maxsize=256)
+def _level_program(mmesh: MiningMesh, C_real: int, minsup: int,
+                   backend: Backend, reduce: str, max_embeddings: int,
+                   survivor_cap: int, rebalance: bool, threshold: float,
+                   donate: bool):
+    """Build (and cache per static config) the jitted level program."""
+    axes = mmesh.axes
+    W = mmesh.n_workers
+    parts = mmesh.spec_parts()
+    rep = mmesh.replicated()
+    fused = is_fused_backend(backend)
+    interpret = backend == "fused_interpret"
+    S = survivor_cap
+    with_rebalance = rebalance and W > 1
+
+    def core(*args):
+        if fused:
+            sched_meta, tiles, inv, pol, pmask, src, dst, emask = args
+            sup_pp, emb_s = fused_level_supports(
+                sched_meta, tiles, pol, pmask, src, dst, emask,
+                interpret=interpret)
+            local_sup = jnp.take(sup_pp.sum(0), inv)        # (Cp,) canonical
+            emb_pp = jnp.take(emb_s, inv, axis=1)           # (PP, Cp)
+            meta_can = jnp.take(sched_meta[:, :5], inv, axis=0)
+        else:
+            meta, pol, pmask, src, dst, emask = args
+            local_sup, _, emb_pp = device_local_supports(
+                meta, pol, pmask, src, dst, emask, backend=backend)
+            meta_can = meta
+
+        gsup, verdict = reduce_supports(local_sup, axes, minsup, reduce,
+                                        gather_gsup=True)
+        Cp = gsup.shape[0]
+        real = jnp.arange(Cp) < C_real
+        keep = (verdict != 0) & real
+
+        # verdict-masked prefix-sum compaction: survivor i's compact slot
+        # is its rank among survivors; one scatter inverts rank -> id.
+        # Ranks past the cap S (and non-survivors) scatter out of bounds.
+        rank = jnp.cumsum(keep.astype(jnp.int32)) - 1
+        n_keep = rank[-1] + 1
+        dest = jnp.where(keep, rank, S)
+        surv = (jnp.zeros((S,), jnp.int32)
+                .at[dest].set(jnp.arange(Cp, dtype=jnp.int32), mode="drop"))
+        cmeta = jnp.take(meta_can, surv, axis=0)            # (S, 5)
+        valid_s = jnp.arange(S) < n_keep                    # (S,)
+
+        # pass 2, cond-gated per compact slot: lax.map is a scan, so the
+        # skip branch of invalid (cap-padding) slots really executes a
+        # constant fill — unlike a vmapped select, padding costs ~nothing
+        PP, _, G, _, K = pol.shape
+        Mc = max_embeddings
+
+        def per_slot(slot):
+            cand, valid = slot
+
+            def do(_):
+                ch, mk, over = jax.vmap(
+                    lambda po, pm, s, d, e: materialize_one(
+                        LevelOL(po, pm), s, d, e, cand,
+                        max_embeddings=Mc)
+                )(pol, pmask, src, dst, emask)
+                return ch, mk, over.sum()
+
+            def skip(_):
+                return (jnp.full((PP, G, Mc, K + 1), -1, jnp.int32),
+                        jnp.zeros((PP, G, Mc), bool),
+                        jnp.zeros((), jnp.int32))
+
+            return jax.lax.cond(valid, do, skip, None)
+
+        ol_s, mask_s, over_s = jax.lax.map(per_slot, (cmeta, valid_s))
+        ol = jnp.moveaxis(ol_s, 0, 1)           # (PP, S, G, Mc, K+1)
+        mask = jnp.moveaxis(mask_s, 0, 1)       # (PP, S, G, Mc)
+        overflow = jax.lax.psum(over_s.sum(), axes)
+        cost_pp = (emb_pp * real[None, :].astype(emb_pp.dtype)).sum(1)
+        return gsup, n_keep, overflow, ol, mask, cost_pp
+
+    n_meta = 3 if fused else 1
+    smapped = jax_compat.shard_map(
+        core, mesh=mmesh.mesh,
+        in_specs=(rep,) * n_meta + (parts,) * 5,
+        out_specs=(rep, rep, rep, parts, parts, parts), check_vma=False)
+
+    def program(*args):
+        gsup, n_keep, overflow, ol, mask, cost = smapped(*args)
+        NP = cost.shape[0]
+        per_worker = cost.astype(jnp.float32).reshape(W, -1).sum(-1)
+        mean = per_worker.mean()
+        imbal = jnp.where(mean > 0, per_worker.max() / mean,
+                          jnp.float32(1.0))
+        if with_rebalance:
+            do_reb = imbal > threshold
+            perm = jnp.where(
+                do_reb, lpt_permutation(cost.astype(jnp.float32), W),
+                jnp.arange(NP, dtype=jnp.int32))
+        else:
+            do_reb = jnp.zeros((), bool)
+            perm = jnp.arange(NP, dtype=jnp.int32)
+        wire = jnp.concatenate([
+            gsup.astype(jnp.int32),
+            jnp.stack([n_keep, overflow, do_reb.astype(jnp.int32),
+                       (imbal * _IMBAL_FX).astype(jnp.int32)]),
+            perm,
+        ])
+        return wire, ol, mask
+
+    donate_argnums = ()
+    if donate:
+        donate_argnums = (n_meta, n_meta + 1)   # the parent OL store
+    return jax.jit(program, donate_argnums=donate_argnums)
+
+
+@functools.lru_cache(maxsize=64)
+def _permute_program(mmesh: MiningMesh):
+    """Partition gather applying a wire-reported LPT permutation to the
+    whole device-resident store (OL + edge arrays) — dispatched only
+    when a rebalance actually fired, so the (rare) all-to-all neither
+    taxes every level's compile nor syncs the host.  Inputs are donated:
+    the repack replaces the store wholesale."""
+    shard = NamedSharding(mmesh.mesh, mmesh.spec_parts())
+
+    def permute(perm, *arrays):
+        return tuple(jax.lax.with_sharding_constraint(
+            jnp.take(a, perm, axis=0), shard) for a in arrays)
+
+    return jax.jit(permute, donate_argnums=tuple(range(1, 6)))
+
+
+def permute_stores(mmesh: MiningMesh, perm: np.ndarray, *arrays):
+    """Apply the level's LPT permutation to (pol, pmask, src, dst,
+    emask) on device.  No host transfer — ``perm`` came home in the
+    wire."""
+    return _permute_program(mmesh)(jnp.asarray(perm, jnp.int32), *arrays)
+
+
+def unpack_wire(wire: np.ndarray, C: int, Cp: int, n_partitions: int
+                ) -> LevelWire:
+    return LevelWire(
+        gsup=wire[:C],
+        n_keep=int(wire[Cp]),
+        overflow=int(wire[Cp + 1]),
+        rebalanced=bool(wire[Cp + 2]),
+        imbalance=float(wire[Cp + 3]) / _IMBAL_FX,
+        perm=wire[Cp + 4: Cp + 4 + n_partitions],
+    )
+
+
+def run_level(
+    mmesh: MiningMesh,
+    meta_p: np.ndarray,       # (Cp, 5) padded candidate metadata (host)
+    C_real: int,              # unpadded candidate count
+    pol: jnp.ndarray,         # (NP, P, G, M, K) sharded dim0
+    pmask: jnp.ndarray,
+    src: jnp.ndarray,         # (NP, T, G, F)
+    dst: jnp.ndarray,
+    emask: jnp.ndarray,
+    *,
+    minsup: int,
+    backend: Backend,
+    reduce: str,
+    max_embeddings: int,
+    survivor_cap: int,
+    rebalance: bool,
+    threshold: float,
+    donate: bool,
+) -> LevelOutputs:
+    """Dispatch one level program and perform the single host sync.
+
+    The fused backends build the parent-grouped tile schedule host-side
+    (same contract as ``map_reduce_supports``), so ``meta_p`` must be
+    concrete.  Returns the unpacked wire plus the device-resident next
+    level state; the caller owns retry policy (escalation / cap miss).
+    """
+    Cp = meta_p.shape[0]
+    n_partitions = pol.shape[0]
+    fn = _level_program(mmesh, C_real, minsup, backend, reduce,
+                        max_embeddings, survivor_cap, rebalance,
+                        threshold, donate)
+    if is_fused_backend(backend):
+        from .candgen import schedule_candidates
+        sched = schedule_candidates(np.asarray(meta_p))
+        out = fn(jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
+                 jnp.asarray(sched.inv), pol, pmask, src, dst, emask)
+    else:
+        out = fn(jnp.asarray(meta_p), pol, pmask, src, dst, emask)
+    wire_d, new_pol, new_pmask = out
+    # THE one device->host transfer of the level
+    wire = unpack_wire(np.asarray(wire_d), C_real, Cp, n_partitions)
+    return LevelOutputs(wire, new_pol, new_pmask, src, dst, emask)

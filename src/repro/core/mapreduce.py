@@ -36,13 +36,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..kernels.ops import (Backend, default_backend, fused_level_supports,
-                           is_fused_backend, level_supports)
+from ..kernels.ops import (Backend, default_backend, device_local_supports,
+                           fused_level_supports, is_fused_backend)
 from ..runtime import jax_compat
 from .candgen import schedule_candidates
 from .embedding import materialize_ol, LevelOL
 
-__all__ = ["MiningMesh", "map_reduce_supports", "map_materialize"]
+__all__ = ["MiningMesh", "map_reduce_supports", "map_materialize",
+           "reduce_supports"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,36 +77,31 @@ class MiningMesh:
         return MiningMesh(jax_compat.make_mesh((1,), ("w",)))
 
 
-def _local_supports_fn(meta, pol, pmask, src, dst, emask, *, backend):
-    """Map phase on one device: vmap the fused join over local partitions.
+def reduce_supports(local_sup, axes, minsup: int, reduce: str, *,
+                    gather_gsup: bool = False):
+    """The shuffle: dense-key aggregation of (C,) local supports.
 
-    Shapes (device-local): pol (PP, P, G, M, K), eol (PP, T, G, F).
-    Returns (C,) local support and (C,) embed-count cost signal, plus the
-    per-partition embed counts (PP, C) for the straggler rebalancer.
+    With ``gather_gsup`` the support counts are all-gathered alongside
+    the verdicts in the reduce_scatter variant — the single-sync level
+    program needs the full vector on every device to pack the wire;
+    the legacy two-program driver leaves them sharded (the host
+    reassembles lazily when reading the output array).
     """
-    sup_pp, emb_pp = jax.vmap(
-        lambda a, b, c, d, e: level_supports(
-            meta, a, b, c, d, e, backend=backend)
-    )(pol, pmask, src, dst, emask)
-    return sup_pp.sum(0), emb_pp.sum(0), emb_pp
-
-
-def _reduce_supports(local_sup, axes, minsup: int, reduce: str):
-    """The shuffle: dense-key aggregation of (C,) local supports."""
     if reduce == "psum":
         gsup = jax.lax.psum(local_sup, axes)                      # (C,)
         verdict = (gsup >= minsup).astype(jnp.int8)
     elif reduce == "reduce_scatter":
         # each worker owns a contiguous key shard (C/W keys) —
         # Hadoop's "reducer owns a key range", as one collective.
-        # Only the 1-byte verdicts are all-gathered; the f32 support
-        # counts stay SHARDED on device (the host reassembles them
-        # lazily when reading the output array).  Wire per key:
+        # Only the 1-byte verdicts are all-gathered (plus the supports
+        # when the caller asks); wire per key:
         # (4+1)·(W-1)/W bytes vs psum's 8·(W-1)/W.
         gsup = jax.lax.psum_scatter(
             local_sup, axes, scatter_dimension=0, tiled=True)      # (C/W,)
         v_shard = (gsup >= minsup).astype(jnp.int8)
         verdict = jax.lax.all_gather(v_shard, axes, axis=0, tiled=True)
+        if gather_gsup:
+            gsup = jax.lax.all_gather(gsup, axes, axis=0, tiled=True)
     else:
         raise ValueError(f"unknown reduce {reduce!r}")
     return gsup, verdict
@@ -121,9 +117,9 @@ def _support_program(mmesh: MiningMesh, minsup: int,
     rep = mmesh.replicated()
 
     def program(meta, pol, pmask, src, dst, emask):
-        local_sup, _local_emb, emb_pp = _local_supports_fn(
+        local_sup, _local_emb, emb_pp = device_local_supports(
             meta, pol, pmask, src, dst, emask, backend=backend)
-        gsup, verdict = _reduce_supports(local_sup, axes, minsup, reduce)
+        gsup, verdict = reduce_supports(local_sup, axes, minsup, reduce)
         return gsup, verdict, emb_pp
 
     sup_spec = rep if reduce == "psum" else parts
@@ -154,7 +150,7 @@ def _support_program_fused(mmesh: MiningMesh, minsup: int,
             interpret=interpret)                    # (PP, Cs) scheduled
         local_sup = jnp.take(sup_pp.sum(0), inv)    # (C,) canonical
         emb_pp = jnp.take(emb_pp_s, inv, axis=1)    # (PP, C) canonical
-        gsup, verdict = _reduce_supports(local_sup, axes, minsup, reduce)
+        gsup, verdict = reduce_supports(local_sup, axes, minsup, reduce)
         return gsup, verdict, emb_pp
 
     sup_spec = rep if reduce == "psum" else parts

@@ -7,10 +7,20 @@ Phases:
                        edge-extension map is implied by the triple table)
                        + the level-1 pattern OLs;
   3. mining          — host enumerates canonical candidates from F_k
-                       (tiny metadata), devices run the fused join
-                       (map), one dense collective aggregates support
-                       (shuffle+reduce), survivors' OLs materialize
-                       data-locally; repeat until no frequent patterns.
+                       (tiny metadata); the devices run the whole level
+                       as ONE program (`core/level_step.py`): fused join
+                       (map), dense collective (shuffle+reduce), on-device
+                       survivor compaction, child-OL materialization and
+                       straggler repack — the host syncs exactly once per
+                       level, on the packed wire vector.  Repeat until no
+                       frequent patterns.
+
+Two pipelines (MirageConfig.pipeline):
+  "single_sync" — the device-resident level program above (default);
+  "legacy"      — the PR-1 two-program driver (separate support and
+                  materialize dispatches, host keep-list, host-side
+                  escalation loop and LPT detour), kept as the
+                  differential oracle and benchmark baseline.
 
 Fault tolerance: every level boundary checkpoints the complete mining
 state (codes + OL store + cursor) atomically — the HDFS write of the
@@ -21,8 +31,11 @@ one level after any failure, and may resume onto a *different* mesh
 Straggler mitigation: the join kernel's embed-count output is an exact
 per-partition cost signal for the *next* level; when predicted imbalance
 exceeds a threshold the partition→device assignment is re-packed (LPT)
-and the OL store re-laid-out (one all-to-all-equivalent gather).  This is
-deterministic load balancing, replacing Hadoop's speculative execution.
+and the OL store re-laid-out (one all-to-all-equivalent gather).  Under
+the single-sync pipeline both the decision and the gather run on device;
+the applied permutation rides home in the wire so checkpoints stay in
+canonical partition order.  This is deterministic load balancing,
+replacing Hadoop's speculative execution.
 """
 from __future__ import annotations
 
@@ -34,16 +47,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.ops import Backend
+from ..kernels.ops import Backend, default_backend
 from ..runtime import checkpoint as ckpt
 from .candgen import Candidate, EdgeAlphabet, generate_candidates
 from .dfscode import Code, array_to_code, code_to_array
 from .embedding import build_edge_ol, candidate_meta, level1_ol
 from .graphdb import Graph
+from .level_step import permute_stores, run_level
 from .mapreduce import MiningMesh, map_materialize, map_reduce_supports
 from .partition import make_partitions
 
 __all__ = ["MirageConfig", "LevelStats", "DistMiningResult", "Mirage"]
+
+PIPELINES = ("single_sync", "legacy")
 
 
 @dataclasses.dataclass
@@ -61,6 +77,18 @@ class MirageConfig:
     escalate_on_overflow: bool = True
     rebalance_threshold: float = 1.25   # max/mean partition cost trigger
     rebalance: bool = True
+    pipeline: str = "single_sync"       # "single_sync" | "legacy"
+    donate: bool = True                 # donate OL buffers when retry-free
+    predict_survivors: bool = True      # shrink the survivor cap from history
+    survivor_slack: float = 2.0         # cap = slack * predicted survivors
+
+    def __post_init__(self):
+        if self.pipeline not in PIPELINES:
+            raise ValueError(f"pipeline={self.pipeline!r} must be one of "
+                             f"{PIPELINES}")
+        if self.n_partitions < 1:
+            raise ValueError(
+                f"n_partitions={self.n_partitions} must be >= 1")
 
 
 @dataclasses.dataclass
@@ -73,6 +101,7 @@ class LevelStats:
     map_seconds: float
     rebalanced: bool
     imbalance: float                    # max/mean partition embed-count
+    escalations: int = 0                # M-cap doublings the valve performed
 
 
 @dataclasses.dataclass
@@ -92,6 +121,27 @@ class DistMiningResult:
         return [len(l) for l in self.levels]
 
 
+@dataclasses.dataclass
+class _LevelOutcome:
+    """What one mined level hands back to the driver loop, identical for
+    both pipelines."""
+
+    gsup: np.ndarray            # (C,) global supports, canonical order
+    keep: np.ndarray            # survivor candidate indices
+    pol: jnp.ndarray            # next-level OL store (compact survivors)
+    pmask: jnp.ndarray
+    src: jnp.ndarray            # edge store (repacked iff rebalanced)
+    dst: jnp.ndarray
+    emask: jnp.ndarray
+    overflow: int
+    max_embeddings: int         # M after any escalation
+    rebalanced: bool
+    imbalance: float
+    perm: Optional[np.ndarray]  # applied partition permutation (or None)
+    map_seconds: float
+    escalations: int
+
+
 class Mirage:
     """The distributed miner.  ``mesh=None`` uses a single-device mesh
     (tests/CPU); production passes ``MiningMesh(make_production_mesh())``.
@@ -107,13 +157,44 @@ class Mirage:
                 f"the worker count {self.mesh.n_workers}")
 
     # ------------------------------------------------------------------
+    def _effective_partitions(self, n_graphs: int) -> int:
+        """Clamp n_partitions to the database size (a partition with no
+        graphs would silently pad) while staying a multiple of the
+        worker count."""
+        cfg, W = self.cfg, self.mesh.n_workers
+        if n_graphs == 0 or cfg.n_partitions <= n_graphs:
+            return cfg.n_partitions
+        clamped = max(W, n_graphs - n_graphs % W)
+        if clamped > n_graphs:
+            raise ValueError(
+                f"database has {n_graphs} graphs but the mesh has {W} "
+                f"workers — need at least one graph per worker")
+        return clamped
+
+    # ------------------------------------------------------------------
     def fit(self, graphs: Sequence[Graph], *, resume: bool = False
             ) -> DistMiningResult:
         cfg = self.cfg
-        t_all = time.perf_counter()
+
+        # peek the checkpoint first: the partition count is baked into
+        # the saved OL store, and the clamp below depends on the mesh —
+        # a resume must reproduce the WRITER's partitioning, not
+        # re-derive one from the (possibly different) current mesh
+        resume_state = resume_meta = None
+        if resume and cfg.checkpoint_dir and ckpt.latest_step(cfg.checkpoint_dir):
+            resume_state, resume_meta = ckpt.load_step(cfg.checkpoint_dir)
 
         # ---- phase 1: partition (host) --------------------------------
-        part = make_partitions(graphs, cfg.minsup, cfg.n_partitions,
+        if resume_state is not None:
+            n_parts = int(resume_state["pol"].shape[0])
+            if n_parts % self.mesh.n_workers:
+                raise ValueError(
+                    f"checkpoint holds {n_parts} partitions, not a "
+                    f"multiple of the current worker count "
+                    f"{self.mesh.n_workers} — resume on a compatible mesh")
+        else:
+            n_parts = self._effective_partitions(len(graphs))
+        part = make_partitions(graphs, cfg.minsup, n_parts,
                                scheme=cfg.scheme)
         alphabet, minsup = part.alphabet, part.minsup
         triples = sorted({t for c in alphabet.canonical()
@@ -140,7 +221,7 @@ class Mirage:
         pmask = np.stack([np.asarray(l.mask) for l in lvl1])
 
         supports: dict[Code, int] = {}
-        for pi, c in enumerate(codes):
+        for c in codes:
             ti = eol0.triple_index[c[0][2:]]
             supports[c] = int(emask[:, ti].any(axis=-1).sum())
         levels: list[list[Code]] = [list(codes)]
@@ -150,13 +231,13 @@ class Mirage:
         M = cfg.max_embeddings
 
         # ---- resume (elastic: mesh may differ from writer's) ----------
-        if resume and cfg.checkpoint_dir and ckpt.latest_step(cfg.checkpoint_dir):
-            state, meta_d = ckpt.load_step(cfg.checkpoint_dir)
+        if resume_state is not None:
+            state = resume_state
             levels = [[array_to_code(a) for a in lvl] for lvl in state["levels"]]
             supports = {array_to_code(a): int(s) for a, s in
                         zip(state["support_codes"], state["support_vals"])}
             pol, pmask = state["pol"], state["pmask"]
-            start_level = int(meta_d["step"])
+            start_level = int(resume_meta["step"])
             M = int(state["max_embeddings"])
             total_overflow = int(state["total_overflow"])
 
@@ -166,7 +247,10 @@ class Mirage:
         # cumulative partition permutation from straggler rebalancing;
         # checkpoints always store the OL store in CANONICAL order so a
         # resumed run (which rebuilds edge-OLs canonically) stays aligned
-        order = np.arange(cfg.n_partitions)
+        order = np.arange(n_parts)
+        # survivor-ratio history drives the next level's compaction cap
+        # (single-sync pipeline); empty = no history yet
+        ratios: list[float] = []
 
         # ---- phase 3: iterative mining ---------------------------------
         k = start_level
@@ -181,45 +265,37 @@ class Mirage:
             meta_p = np.concatenate(
                 [meta, np.tile([[0, 0, 0, 1, 0]], (Cp - C, 1))]).astype(np.int32)
 
-            t_map = time.perf_counter()
-            gsup, verdict, emb_pp = map_reduce_supports(
-                self.mesh, meta_p, pol, pmask,
-                src_d, dst_d, emask_d,
-                minsup=minsup, backend=cfg.backend, reduce=cfg.reduce)
-            map_secs = time.perf_counter() - t_map
+            if cfg.pipeline == "legacy":
+                out = self._level_legacy(
+                    meta_p, meta, C, pol, pmask, src_d, dst_d, emask_d,
+                    minsup, M, n_parts)
+            else:
+                out = self._level_single_sync(
+                    meta_p, meta, C, pol, pmask, src_d, dst_d, emask_d,
+                    minsup, M, ratios)
+            M = out.max_embeddings
+            total_overflow += out.overflow
 
-            keep = [i for i in range(C) if verdict[i]]
-            if not keep:
-                stats.append(LevelStats(k + 1, C, 0, 0,
-                                        time.perf_counter() - t0, map_secs,
-                                        False, 1.0))
+            if len(out.keep) == 0:
+                stats.append(LevelStats(k + 1, C, 0, out.overflow,
+                                        time.perf_counter() - t0,
+                                        out.map_seconds, False, out.imbalance,
+                                        out.escalations))
                 break
 
-            keep_meta = jnp.asarray(meta[keep])
-            pol, pmask, overflow, M = self._materialize_exact(
-                keep_meta, pol, pmask, src_d, dst_d, emask_d, M)
-            total_overflow += overflow
+            pol, pmask = out.pol, out.pmask
+            src_d, dst_d, emask_d = out.src, out.dst, out.emask
+            levels.append([cands[i].code for i in out.keep])
+            for i in out.keep:
+                supports[cands[i].code] = int(out.gsup[i])
+            if out.perm is not None:
+                order = order[out.perm]
+            ratios.append(len(out.keep) / C)
 
-            levels.append([cands[i].code for i in keep])
-            for i in keep:
-                supports[cands[i].code] = int(gsup[i])
-
-            # ---- straggler rebalance (cost signal: embed counts) -------
-            cost = emb_pp.reshape(cfg.n_partitions, -1).sum(-1).astype(np.float64)
-            imbal = _imbalance(cost, self.mesh.n_workers)
-            rebalanced = False
-            if (cfg.rebalance and self.mesh.n_workers > 1
-                    and imbal > cfg.rebalance_threshold):
-                perm = _lpt_order(cost, self.mesh.n_workers)
-                take = lambda a: jnp.take(a, jnp.asarray(perm), axis=0)
-                pol, pmask = take(pol), take(pmask)
-                src_d, dst_d, emask_d = take(src_d), take(dst_d), take(emask_d)
-                order = order[perm]
-                rebalanced = True
-
-            stats.append(LevelStats(k + 1, C, len(keep), overflow,
-                                    time.perf_counter() - t0, map_secs,
-                                    rebalanced, imbal))
+            stats.append(LevelStats(k + 1, C, len(out.keep), out.overflow,
+                                    time.perf_counter() - t0,
+                                    out.map_seconds, out.rebalanced,
+                                    out.imbalance, out.escalations))
 
             if cfg.checkpoint_dir:
                 self._save(cfg.checkpoint_dir, k + 1, levels, supports,
@@ -230,18 +306,140 @@ class Mirage:
                                 total_overflow)
 
     # ------------------------------------------------------------------
+    def _survivor_cap(self, C: int, Cp: int, ratios: list[float]) -> int:
+        """Static survivor cap for the level program's compaction stage.
+
+        Cap padding slots are cond-gated on device (they execute a
+        constant fill, not a materialization), so the cap only governs
+        the child store's HBM footprint; a miss costs one
+        materialize-only retry dispatch (the pass-1 supports stay
+        valid).  Policy: slack × the worst recent survival ratio, or a
+        quarter of the candidate space when there is no history yet."""
+        if not self.cfg.predict_survivors:
+            return Cp
+        if not ratios:
+            return min(Cp, max(32, -(-Cp // 4)))
+        r = max(ratios[-2:])
+        return min(Cp, max(1, int(np.ceil(
+            self.cfg.survivor_slack * r * C)) + 16))
+
+    def _level_single_sync(self, meta_p, meta, C, pol, pmask, src, dst,
+                           emask, minsup, M, ratios) -> _LevelOutcome:
+        """One level through the device-resident program: a single
+        dispatch and a single device→host sync on the wire vector.
+
+        Exceptional paths re-use the still-valid pass-1 supports and fall
+        back to the cheap materialize-only program from the preserved
+        inputs: a survivor-cap miss re-materializes the full survivor
+        set, and the escalation valve re-materializes at a doubled M.
+        Donation is engaged only when no such retry is possible."""
+        cfg = self.cfg
+        Cp = meta_p.shape[0]
+        backend = cfg.backend or default_backend()
+        S = self._survivor_cap(C, Cp, ratios)
+        may_retry = (S < Cp or (cfg.escalate_on_overflow
+                                and M < cfg.max_embeddings_limit))
+        t_map = time.perf_counter()
+        out = run_level(
+            self.mesh, meta_p, C, pol, pmask, src, dst, emask,
+            minsup=minsup, backend=backend, reduce=cfg.reduce,
+            max_embeddings=M, survivor_cap=S,
+            rebalance=cfg.rebalance, threshold=cfg.rebalance_threshold,
+            donate=cfg.donate and not may_retry)
+        w = out.wire
+        map_secs = time.perf_counter() - t_map
+
+        keep = np.flatnonzero(w.gsup >= minsup)
+        n = int(w.n_keep)
+        overflow = w.overflow
+        escalations = 0
+        new_pol = out.pol[:, :max(n, 1)]
+        new_pmask = out.pmask[:, :max(n, 1)]
+
+        escalatable = (cfg.escalate_on_overflow
+                       and M < cfg.max_embeddings_limit)
+        if n > 0 and (n > S or (overflow > 0 and escalatable)):
+            if overflow > 0 and escalatable:
+                # the program just proved M too small (for a cap miss,
+                # on a subset of survivors — still a proof): skip the
+                # known-bad M before re-materializing
+                M = min(M * 2, cfg.max_embeddings_limit)
+                escalations += 1
+            new_pol, new_pmask, overflow, M, esc = self._materialize_exact(
+                jnp.asarray(meta[keep]), pol, pmask, src, dst, emask, M)
+            escalations += esc
+
+        if w.rebalanced and n > 0:
+            # apply the wire-reported LPT permutation on device (no sync)
+            new_pol, new_pmask, src, dst, emask = permute_stores(
+                self.mesh, w.perm, new_pol, new_pmask, src, dst, emask)
+
+        return _LevelOutcome(
+            gsup=w.gsup, keep=keep, pol=new_pol, pmask=new_pmask,
+            src=src, dst=dst, emask=emask,
+            overflow=overflow, max_embeddings=M,
+            rebalanced=w.rebalanced and n > 0, imbalance=w.imbalance,
+            perm=w.perm if (w.rebalanced and n > 0) else None,
+            map_seconds=map_secs, escalations=escalations)
+
+    # ------------------------------------------------------------------
+    def _level_legacy(self, meta_p, meta, C, pol, pmask, src, dst, emask,
+                      minsup, M, n_parts) -> _LevelOutcome:
+        """The PR-1 driver: separate support and materialize programs
+        with host round-trips between them (keep list, escalation loop,
+        LPT detour).  Kept as differential oracle + benchmark baseline."""
+        cfg = self.cfg
+        t_map = time.perf_counter()
+        gsup, verdict, emb_pp = map_reduce_supports(
+            self.mesh, meta_p, pol, pmask, src, dst, emask,
+            minsup=minsup, backend=cfg.backend, reduce=cfg.reduce)
+        map_secs = time.perf_counter() - t_map
+
+        keep = np.flatnonzero(verdict[:C] != 0)
+        if len(keep) == 0:
+            return _LevelOutcome(
+                gsup=gsup[:C], keep=keep, pol=pol, pmask=pmask,
+                src=src, dst=dst, emask=emask, overflow=0,
+                max_embeddings=M, rebalanced=False, imbalance=1.0,
+                perm=None, map_seconds=map_secs, escalations=0)
+
+        keep_meta = jnp.asarray(meta[keep])
+        pol, pmask, overflow, M, escalations = self._materialize_exact(
+            keep_meta, pol, pmask, src, dst, emask, M)
+
+        # ---- straggler rebalance (cost signal: embed counts) -----------
+        cost = emb_pp.reshape(n_parts, -1).sum(-1).astype(np.float64)
+        imbal = _imbalance(cost, self.mesh.n_workers)
+        rebalanced = False
+        perm = None
+        if (cfg.rebalance and self.mesh.n_workers > 1
+                and imbal > cfg.rebalance_threshold):
+            perm = _lpt_order(cost, self.mesh.n_workers)
+            take = lambda a: jnp.take(a, jnp.asarray(perm), axis=0)
+            pol, pmask = take(pol), take(pmask)
+            src, dst, emask = take(src), take(dst), take(emask)
+            rebalanced = True
+        return _LevelOutcome(
+            gsup=gsup[:C], keep=keep, pol=pol, pmask=pmask,
+            src=src, dst=dst, emask=emask, overflow=overflow,
+            max_embeddings=M, rebalanced=rebalanced, imbalance=imbal,
+            perm=perm, map_seconds=map_secs, escalations=escalations)
+
+    # ------------------------------------------------------------------
     def _materialize_exact(self, keep_meta, pol, pmask, src, dst, emask, M):
         """Materialize survivors; escalate M until no overflow (exactness
         valve — keeps device supports == paper semantics)."""
         cfg = self.cfg
+        escalations = 0
         while True:
             new_pol, new_pmask, overflow = map_materialize(
                 self.mesh, keep_meta, pol, pmask, src, dst, emask,
                 max_embeddings=M)
             if (overflow == 0 or not cfg.escalate_on_overflow
                     or M >= cfg.max_embeddings_limit):
-                return new_pol, new_pmask, overflow, M
+                return new_pol, new_pmask, overflow, M, escalations
             M = min(M * 2, cfg.max_embeddings_limit)
+            escalations += 1
 
     def _device_put(self, pol, pmask, src, dst, emask):
         sharding = jax.sharding.NamedSharding(

@@ -55,8 +55,22 @@ def make_partitions(
     *,
     scheme: int = 2,
 ) -> PartitionResult:
-    """Filter + split.  ``minsup`` may be absolute (int) or a fraction."""
+    """Filter + split.  ``minsup`` may be absolute (int) or a fraction.
+
+    Raises when the split would leave partitions empty: an empty
+    partition pads silently into the dense device encoding and wastes a
+    worker slot — the caller (``Mirage.fit``) auto-clamps instead.  An
+    EMPTY database is exempt (its partitions are necessarily empty;
+    mining short-circuits to an empty result).
+    """
     n = len(graphs)
+    if n_partitions < 1:
+        raise ValueError(f"n_partitions={n_partitions} must be >= 1")
+    if n and n_partitions > n:
+        raise ValueError(
+            f"n_partitions={n_partitions} exceeds the database size {n}: "
+            f"every partition must hold at least one graph (clamp "
+            f"n_partitions or pass more graphs)")
     abs_minsup = (int(np.ceil(minsup * n)) if isinstance(minsup, float)
                   else int(minsup))
     filtered, alphabet = filter_infrequent_edges(graphs, abs_minsup)
@@ -68,10 +82,13 @@ def make_partitions(
             parts[i % n_partitions].append(i)
     elif scheme == 2:
         load = np.zeros(n_partitions, np.int64)
-        # LPT: heaviest graphs first onto the lightest partition
+        # LPT: heaviest graphs first onto the lightest partition;
+        # ties (e.g. fully-filtered zero-edge graphs) break on graph
+        # count so no partition is starved empty
         order = sorted(ids, key=lambda i: -filtered[i].n_edges)
         for i in order:
-            p = int(load.argmin())
+            p = min(range(n_partitions),
+                    key=lambda b: (load[b], len(parts[b])))
             parts[p].append(i)
             load[p] += filtered[i].n_edges
     else:

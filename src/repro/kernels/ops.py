@@ -31,8 +31,8 @@ from .support_count import support_count_pallas
 
 Backend = Literal["ref", "pallas", "interpret", "fused", "fused_interpret"]
 
-__all__ = ["level_supports", "fused_level_supports", "default_backend",
-           "is_fused_backend"]
+__all__ = ["level_supports", "fused_level_supports", "device_local_supports",
+           "default_backend", "is_fused_backend"]
 
 
 def default_backend() -> Backend:
@@ -81,6 +81,29 @@ def fused_level_supports(
     emaskp = _pad_to(emask.astype(jnp.int8), 2, tg)
     return fused_level_pallas(sched_meta, tiles, polp, pmaskp, srcp, dstp,
                               emaskp, tile_g=tg, interpret=interpret)
+
+
+def device_local_supports(
+    meta: jnp.ndarray,     # (C, 5) int32 — replicated candidate metadata
+    pol: jnp.ndarray,      # (PP, P, G, M, K) — device-local partitions
+    pmask: jnp.ndarray,    # (PP, P, G, M)
+    src: jnp.ndarray,      # (PP, T, G, F)
+    dst: jnp.ndarray,
+    emask: jnp.ndarray,
+    *,
+    backend: Backend | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Map phase on one device: the per-candidate join vmapped over the
+    device-local partition stack.  Returns the summed (C,) local support
+    and embed count plus the per-partition (PP, C) embed counts (the
+    straggler-rebalance cost signal).  Non-fused backends only — the
+    fused kernel covers the partition axis in its own grid
+    (``fused_level_supports``)."""
+    sup_pp, emb_pp = jax.vmap(
+        lambda a, b, c, d, e: level_supports(
+            meta, a, b, c, d, e, backend=backend)
+    )(pol, pmask, src, dst, emask)
+    return sup_pp.sum(0), emb_pp.sum(0), emb_pp
 
 
 def level_supports(

@@ -9,13 +9,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.embedding import join_valid
-
 __all__ = ["embedding_join_ref", "support_count_ref"]
 
 
 def embedding_join_ref(meta, pol, pmask, src, dst, emask):
     """(C, G) matched / count — oracle for embedding_join_pallas."""
+    # deferred: repro.core.embedding -> repro.core.__init__ -> mapreduce
+    # -> kernels.ops -> this module would otherwise be a cycle, breaking
+    # `import repro.kernels.ops` as the first repro import
+    from repro.core.embedding import join_valid
+
     def one(cand):
         parent, stub, to, fwd, tidx = (cand[0], cand[1], cand[2], cand[3],
                                        cand[4])

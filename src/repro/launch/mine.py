@@ -25,7 +25,13 @@ def main() -> None:
     ap.add_argument("--reduce", default="psum",
                     choices=["psum", "reduce_scatter"])
     ap.add_argument("--backend", default=None,
-                    choices=[None, "ref", "pallas", "interpret"])
+                    choices=[None, "ref", "pallas", "interpret", "fused",
+                             "fused_interpret"])
+    ap.add_argument("--pipeline", default="single_sync",
+                    choices=["single_sync", "legacy"],
+                    help="single_sync: one device program + one host "
+                         "sync per level (default); legacy: the PR-1 "
+                         "two-program driver")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -48,7 +54,7 @@ def main() -> None:
         minsup=minsup, n_partitions=args.partitions, scheme=args.scheme,
         max_size=args.max_size, max_embeddings=args.max_embeddings,
         reduce=args.reduce, backend=args.backend,
-        checkpoint_dir=args.ckpt_dir)
+        pipeline=args.pipeline, checkpoint_dir=args.ckpt_dir)
 
     t0 = time.perf_counter()
     res = Mirage(cfg).fit(graphs, resume=args.resume)

@@ -1,0 +1,143 @@
+"""Differential conformance: the distributed miner vs the exact host
+oracle, pattern-for-pattern and support-for-support, across the full
+backend × reduce-mode × partition-scheme matrix.
+
+The compiled kernel backends (``fused``, ``pallas``) only lower on TPU;
+off-TPU each resolves to its interpret-mode twin so the matrix always
+runs end-to-end with identical semantics (the interpret kernels execute
+the same Pallas program, un-jitted).
+
+A deeper Hypothesis-driven sweep rides along when hypothesis is
+installed (random DBs, random configs); the seeded matrix above is the
+always-on floor.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graphdb import Graph, random_db
+from repro.core.host_miner import mine_host
+from repro.core.mining import Mirage, MirageConfig
+
+BACKENDS = ["fused", "fused_interpret", "pallas", "ref"]
+_ON_TPU = jax.default_backend() == "tpu"
+_CPU_TWIN = {"fused": "fused_interpret", "pallas": "interpret"}
+
+
+def resolve_backend(backend: str) -> str:
+    if _ON_TPU:
+        return backend
+    return _CPU_TWIN.get(backend, backend)
+
+
+def canon_host(res):
+    return sorted((c, i.support) for c, i in res.frequent.items())
+
+
+def canon_dist(res):
+    return sorted(res.supports.items())
+
+
+_DBS = {}
+
+
+def conformance_db():
+    """One shared seeded DB + host-oracle result for the whole matrix."""
+    if "db" not in _DBS:
+        graphs = random_db(18, n_vertices=6, extra_edge_prob=0.35,
+                           n_vlabels=3, n_elabels=2, seed=42)
+        _DBS["db"] = (graphs, mine_host(graphs, 5, max_size=3))
+    return _DBS["db"]
+
+
+@pytest.mark.parametrize("scheme", [1, 2])
+@pytest.mark.parametrize("reduce", ["psum", "reduce_scatter"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_conformance_matrix(backend, reduce, scheme):
+    graphs, ref = conformance_db()
+    cfg = MirageConfig(minsup=5, n_partitions=2, scheme=scheme,
+                       max_size=3, reduce=reduce,
+                       backend=resolve_backend(backend))
+    res = Mirage(cfg).fit(graphs)
+    assert [set(l) for l in res.levels] == [set(l) for l in ref.levels], (
+        backend, reduce, scheme)
+    assert canon_dist(res) == canon_host(ref), (backend, reduce, scheme)
+
+
+@pytest.mark.parametrize("pipeline", ["single_sync", "legacy"])
+def test_conformance_pipelines_agree(pipeline):
+    """Both driver pipelines must produce the oracle result — the legacy
+    two-program driver doubles as a differential check on the fused
+    level program."""
+    graphs, ref = conformance_db()
+    cfg = MirageConfig(minsup=5, n_partitions=2, max_size=3,
+                       pipeline=pipeline)
+    res = Mirage(cfg).fit(graphs)
+    assert canon_dist(res) == canon_host(ref), pipeline
+
+
+def test_escalation_valve_adversarial_overflow():
+    """Adversarial DB: one vertex/edge label and dense wiring make the
+    level-2 embedding counts blow straight through the initial M cap.
+    The valve must escalate (observable in stats) and land on exact
+    supports with zero residual overflow."""
+    graphs = random_db(8, n_vertices=8, extra_edge_prob=0.9, n_vlabels=1,
+                       n_elabels=1, seed=7)
+    ref = mine_host(graphs, 4, max_size=3)
+    cfg = MirageConfig(minsup=4, n_partitions=2, max_size=3,
+                       max_embeddings=2, escalate_on_overflow=True,
+                       max_embeddings_limit=4096)
+    res = Mirage(cfg).fit(graphs)
+    assert sum(st.escalations for st in res.stats) > 0, (
+        "the M cap must actually overflow for this DB")
+    assert res.total_overflow == 0
+    assert [set(l) for l in res.levels] == [set(l) for l in ref.levels]
+    assert canon_dist(res) == canon_host(ref)
+
+
+def test_escalation_valve_respects_ceiling():
+    """With a hard ceiling below the need, overflow must be *reported*
+    (exactness telemetry), never silently swallowed."""
+    graphs = random_db(8, n_vertices=8, extra_edge_prob=0.9, n_vlabels=1,
+                       n_elabels=1, seed=7)
+    cfg = MirageConfig(minsup=4, n_partitions=2, max_size=3,
+                       max_embeddings=2, escalate_on_overflow=True,
+                       max_embeddings_limit=4)
+    res = Mirage(cfg).fit(graphs)
+    assert res.total_overflow > 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (optional dependency)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    _HAVE_HYP = True
+except ImportError:                                        # pragma: no cover
+    _HAVE_HYP = False
+
+if _HAVE_HYP:
+    @st.composite
+    def small_dbs(draw):
+        n = draw(st.integers(6, 14))
+        seed = draw(st.integers(0, 2**31 - 1))
+        return random_db(n, n_vertices=6, vertex_jitter=1,
+                         extra_edge_prob=0.3, n_vlabels=3, n_elabels=2,
+                         seed=seed)
+
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(small_dbs(),
+           st.sampled_from(["fused_interpret", "ref"]),
+           st.sampled_from(["psum", "reduce_scatter"]),
+           st.sampled_from([1, 2]),
+           st.sampled_from([1, 2]))
+    def test_conformance_hypothesis(graphs, backend, reduce, scheme, parts):
+        minsup = max(2, len(graphs) // 3)
+        ref = mine_host(graphs, minsup, max_size=3)
+        cfg = MirageConfig(minsup=minsup, n_partitions=parts, scheme=scheme,
+                           max_size=3, reduce=reduce,
+                           backend=resolve_backend(backend))
+        res = Mirage(cfg).fit(graphs)
+        assert canon_dist(res) == canon_host(ref), (backend, reduce, scheme)

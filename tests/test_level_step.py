@@ -1,0 +1,159 @@
+"""Single-sync level program: wire parity vs the legacy two-program
+driver, the one-transfer-per-level contract, on-device LPT, survivor-cap
+retry, and donation-mode correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import jax._src.array as _jarr
+
+from repro.core.graphdb import paper_toy_db, random_db
+from repro.core.host_miner import mine_host
+from repro.core.level_step import lpt_permutation, run_level
+from repro.core.mapreduce import MiningMesh, map_reduce_supports
+from repro.core.mining import Mirage, MirageConfig, _lpt_order
+from repro.core.partition import make_partitions
+from repro.core.embedding import build_edge_ol, candidate_meta, level1_ol
+from repro.core.candgen import generate_candidates
+
+
+def _prep(graphs, minsup, n_parts):
+    """Phase 1+2 of the driver, host-side (mirrors Mirage.fit prep)."""
+    part = make_partitions(graphs, minsup, n_parts)
+    alphabet = part.alphabet
+    triples = sorted({t for c in alphabet.canonical()
+                      for t in (c, (c[2], c[1], c[0]))})
+    G = max(len(p) for p in part.partitions)
+    eols = [build_edge_ol(p, triples, pad_graphs=G) for p in part.partitions]
+    F = max(e.src.shape[-1] for e in eols)
+
+    def padf(a, fill):
+        w = [(0, 0)] * (a.ndim - 1) + [(0, F - a.shape[-1])]
+        return np.pad(a, w, constant_values=fill)
+
+    src = np.stack([padf(e.src, -1) for e in eols])
+    dst = np.stack([padf(e.dst, -1) for e in eols])
+    emask = np.stack([padf(e.mask, False) for e in eols])
+    codes = [((0, 1, a, e, b),) for (a, e, b) in alphabet.canonical()]
+    lvl1 = [level1_ol(codes, e, max_embeddings=max(8, F)) for e in eols]
+    pol = np.stack([np.asarray(l.ol) for l in lvl1])
+    pmask = np.stack([np.asarray(l.mask) for l in lvl1])
+    cands = generate_candidates(codes, alphabet)
+    meta = candidate_meta(cands, eols[0])
+    return meta, pol, pmask, src, dst, emask, part.minsup
+
+
+def test_run_level_wire_matches_legacy_supports():
+    """The wire's support vector must equal the legacy map_reduce
+    round's, for every backend that runs on this host."""
+    graphs = random_db(12, n_vertices=6, extra_edge_prob=0.3, n_vlabels=2,
+                       n_elabels=2, seed=5)
+    meta, pol, pmask, src, dst, emask, minsup = _prep(graphs, 3, 2)
+    mesh = MiningMesh.single_device()
+    C = meta.shape[0]
+    arrs = tuple(map(jnp.asarray, (pol, pmask, src, dst, emask)))
+    for backend in ("ref", "interpret", "fused_interpret"):
+        gsup_ref, _, _ = map_reduce_supports(
+            mesh, meta, *arrs, minsup=minsup, backend=backend)
+        out = run_level(mesh, meta, C, *arrs, minsup=minsup,
+                        backend=backend, reduce="psum", max_embeddings=16,
+                        survivor_cap=C, rebalance=False, threshold=1.25,
+                        donate=False)
+        np.testing.assert_array_equal(out.wire.gsup, gsup_ref[:C], backend)
+        assert out.wire.n_keep == int((gsup_ref[:C] >= minsup).sum())
+
+
+def test_exactly_one_transfer_per_level():
+    """The single-sync contract: mining N levels performs exactly N
+    device→host transfers (counted at jax's ArrayImpl fetch point), with
+    zero escalations/retries in play."""
+    graphs = random_db(24, n_vertices=7, extra_edge_prob=0.3, n_vlabels=3,
+                       n_elabels=2, seed=11)
+    cfg = MirageConfig(minsup=5, n_partitions=4, max_size=4,
+                       predict_survivors=False)
+
+    counts = {"n": 0}
+    orig = _jarr.ArrayImpl._value
+
+    def counting(self):
+        counts["n"] += 1
+        return orig.fget(self)
+
+    _jarr.ArrayImpl._value = property(counting)
+    try:
+        res = Mirage(cfg).fit(graphs)
+    finally:
+        _jarr.ArrayImpl._value = orig
+
+    assert sum(st.escalations for st in res.stats) == 0
+    assert counts["n"] == len(res.stats), (
+        f"{counts['n']} device→host transfers for {len(res.stats)} levels")
+
+    # the legacy pipeline crosses the boundary strictly more often
+    counts["n"] = 0
+    _jarr.ArrayImpl._value = property(counting)
+    try:
+        res_legacy = Mirage(
+            MirageConfig(minsup=5, n_partitions=4, max_size=4,
+                         pipeline="legacy")).fit(graphs)
+    finally:
+        _jarr.ArrayImpl._value = orig
+    assert counts["n"] > len(res_legacy.stats)
+    assert sorted(res.supports.items()) == sorted(res_legacy.supports.items())
+
+
+def test_lpt_permutation_matches_host_balance():
+    """Device LPT must produce a valid permutation whose per-worker loads
+    match the host LPT's (both are LPT — identical bucket loads even if
+    tie order differs)."""
+    rng = np.random.default_rng(3)
+    for w in (2, 4):
+        cost = rng.integers(1, 100, 8).astype(np.float32)
+        perm_d = np.asarray(lpt_permutation(jnp.asarray(cost), w))
+        perm_h = _lpt_order(cost.astype(np.float64), w)
+        assert sorted(perm_d.tolist()) == list(range(8))
+        loads_d = cost[perm_d].reshape(w, -1).sum(-1)
+        loads_h = cost[perm_h].reshape(w, -1).sum(-1)
+        np.testing.assert_allclose(sorted(loads_d), sorted(loads_h))
+
+
+def test_survivor_cap_miss_retries_exactly(monkeypatch):
+    """A survivor cap below the true survivor count must take the
+    materialize-only retry path (observable via _materialize_exact) and
+    still produce exact results."""
+    graphs = paper_toy_db()
+    ref = mine_host(graphs, 2)
+    # force a cap miss at every level: S=1 while levels keep >1 survivor
+    monkeypatch.setattr(Mirage, "_survivor_cap",
+                        lambda self, C, Cp, ratios: 1)
+    retries = {"n": 0}
+    orig = Mirage._materialize_exact
+
+    def counting(self, *a, **kw):
+        retries["n"] += 1
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(Mirage, "_materialize_exact", counting)
+    cfg = MirageConfig(minsup=2, n_partitions=2, max_embeddings=8)
+    res = Mirage(cfg).fit(graphs)
+    assert retries["n"] > 0, "the cap-miss retry branch must fire"
+    assert sum(res.counts()) == 13
+    for code, sup in res.supports.items():
+        assert sup == ref.frequent[code].support, code
+
+
+def test_donation_mode_correct():
+    """With the escalation valve off and no cap prediction the program
+    donates its input buffers — results must be unchanged."""
+    graphs = random_db(16, n_vertices=6, extra_edge_prob=0.3, n_vlabels=2,
+                       n_elabels=2, seed=9)
+    ref = mine_host(graphs, 4, max_size=4)
+    cfg = MirageConfig(minsup=4, n_partitions=2, max_size=4,
+                       max_embeddings=64, escalate_on_overflow=False,
+                       predict_survivors=False, donate=True)
+    res = Mirage(cfg).fit(graphs)
+    assert res.total_overflow == 0
+    assert [set(l) for l in res.levels] == [set(l) for l in ref.levels]
+    for code, sup in res.supports.items():
+        assert sup == ref.frequent[code].support, code

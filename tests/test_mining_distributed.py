@@ -80,6 +80,58 @@ def test_checkpoint_resume(tmp_path):
     assert_same_result(resumed, ref)
 
 
+def test_make_partitions_rejects_empty_partitions():
+    graphs = paper_toy_db()
+    from repro.core.partition import make_partitions
+    with pytest.raises(ValueError, match="exceeds the database size"):
+        make_partitions(graphs, 2, len(graphs) + 1)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_partitions(graphs, 2, 0)
+
+
+def test_scheme2_spreads_zero_edge_graphs():
+    """LPT ties (graphs fully stripped by the edge filter) must not
+    starve partitions empty."""
+    from repro.core.graphdb import Graph
+    from repro.core.partition import make_partitions
+    # distinct singleton labels -> every edge is infrequent at minsup 2
+    graphs = [Graph([i, i], [(0, 1)], [i]) for i in range(8)]
+    part = make_partitions(graphs, 2, 4, scheme=2)
+    assert all(len(p) > 0 for p in part.partitions)
+
+
+def test_mirage_clamps_excess_partitions():
+    """n_partitions > |G| auto-clamps (instead of silently padding empty
+    partitions) and still matches the oracle."""
+    graphs = paper_toy_db()
+    ref = mine_host(graphs, 2)
+    cfg = MirageConfig(minsup=2, n_partitions=64, max_embeddings=8)
+    res = Mirage(cfg).fit(graphs)
+    assert_same_result(res, ref)
+
+
+def test_resume_reuses_checkpointed_partition_count(tmp_path):
+    """A resumed run must reproduce the WRITER's partitioning, even when
+    the clamp is active (n_partitions > |G|) — the partition count is
+    baked into the checkpointed OL store."""
+    graphs = pubchem_like_db(5, seed=3, avg_edges=9)
+    ref = mine_host(graphs, 2, max_size=4)
+    cfg = MirageConfig(minsup=2, n_partitions=16, max_size=2,
+                       checkpoint_dir=str(tmp_path / "ck"))
+    Mirage(cfg).fit(graphs)                      # clamps to 5 partitions
+    cfg2 = MirageConfig(minsup=2, n_partitions=16, max_size=4,
+                        checkpoint_dir=str(tmp_path / "ck"))
+    res = Mirage(cfg2).fit(graphs, resume=True)
+    assert_same_result(res, ref)
+
+
+def test_mirage_config_rejects_bad_partitions():
+    with pytest.raises(ValueError, match="must be >= 1"):
+        MirageConfig(minsup=2, n_partitions=0)
+    with pytest.raises(ValueError, match="pipeline"):
+        MirageConfig(minsup=2, pipeline="bogus")
+
+
 def test_naive_baseline_duplicates():
     """Hill et al. baseline emits duplicates; MIRAGE's distinct set matches."""
     graphs = paper_toy_db()
