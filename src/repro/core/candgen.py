@@ -29,7 +29,7 @@ import numpy as np
 from .dfscode import Code, Edge5, code_to_graph, is_canonical, rightmost_path
 
 __all__ = ["Extension", "Candidate", "EdgeAlphabet", "generate_candidates",
-           "CandidateSchedule", "schedule_candidates"]
+           "CandidateSchedule", "schedule_candidates", "pad_schedule"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +185,10 @@ def schedule_candidates(meta: np.ndarray, tile_c: int = 8, *,
     blocks and maximal HBM-tile reuse, while adversarially scattered sets
     degrade gracefully to ``tile_c=1`` (still single-launch, still no
     (C, G) intermediates) instead of 8×-ing the map-phase work.
+
+    Shape bucketing pads the finished schedule via ``pad_schedule``
+    (whole invalid tiles + a parked inverse-permutation tail) — see
+    ``core/buckets.py`` and the bucketed path of ``run_level``.
     """
     meta = np.asarray(meta, np.int32).reshape(-1, 5)
     C = meta.shape[0]
@@ -227,3 +231,41 @@ def schedule_candidates(meta: np.ndarray, tile_c: int = 8, *,
     inv = np.empty(C, np.int32)
     inv[order] = pos
     return CandidateSchedule(sched, tiles.astype(np.int32), inv, tile_c)
+
+
+def pad_schedule(sched: CandidateSchedule, *, rows_to: int | None = None,
+                 inv_to: int | None = None) -> CandidateSchedule:
+    """Bucket-pad an existing schedule (see ``schedule_candidates``):
+    whole invalid tiles up to ``rows_to`` scheduled rows, and the
+    inverse permutation out to ``inv_to`` padded candidates."""
+    meta, tiles, inv = _pad_schedule(sched.meta, sched.tiles, sched.inv,
+                                     sched.tile_c, rows_to, inv_to)
+    return CandidateSchedule(meta, tiles, inv, sched.tile_c)
+
+
+def _pad_schedule(sched: np.ndarray, tiles: np.ndarray, inv: np.ndarray,
+                  tile_c: int, pad_rows_to: int | None,
+                  pad_inv_to: int | None
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Bucket padding: whole invalid tiles on the row axis, parked
+    pointers on the inverse permutation (see ``schedule_candidates``)."""
+    Cs = sched.shape[0]
+    target = Cs
+    if pad_rows_to is not None:
+        target = max(Cs, -(-pad_rows_to // tile_c) * tile_c)
+    need_inv = pad_inv_to is not None and pad_inv_to > inv.shape[0]
+    if need_inv and target == Cs and not (sched[:, 5] == 0).any():
+        target += tile_c             # guarantee a row to park inv padding
+    if target > Cs:
+        pad_row = np.asarray([0, 0, 0, 1, 0, 0], np.int32)
+        sched = np.concatenate([sched,
+                                np.tile(pad_row, (target - Cs, 1))])
+        tiles = np.concatenate(
+            [tiles, np.zeros(((target - Cs) // tile_c, 2), np.int32)])
+    if need_inv:
+        # an invalid row always exists here (appended above if needed),
+        # so padded candidates can never read a real candidate's support
+        park = int(np.flatnonzero(sched[:, 5] == 0)[0])
+        inv = np.concatenate(
+            [inv, np.full(pad_inv_to - inv.shape[0], park, np.int32)])
+    return sched, tiles, inv

@@ -211,15 +211,25 @@ def materialize_one(
     cand: jnp.ndarray,          # (5,) one candidate row
     *,
     max_embeddings: int,
+    out_width: int | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Child OL of ONE candidate: (G, Mc, K+1) rows, (G, Mc) mask, and
+    """Child OL of ONE candidate: (G, Mc, W) rows, (G, Mc) mask, and
     the scalar overflow (matches dropped by the Mc cap).  The single-slot
     building block: `materialize_ol` maps it over a survivor batch, and
     the level program (`core/level_step.py`) cond-gates it per compact
-    slot so cap padding costs nothing."""
+    slot so cap padding costs nothing.
+
+    ``out_width`` is the child's vertex-slot width W (default K+1, the
+    exact unbucketed growth).  Under shape bucketing the parent store is
+    already wider than its real pattern, so W may equal K — the new
+    vertex then lands in a slot that held PAD — and must never shrink
+    below it."""
     G, M, K = level.ol.shape[1:]
     F = eol_src.shape[-1]
     Mc = max_embeddings
+    W = K + 1 if out_width is None else out_width
+    if W < K:
+        raise ValueError(f"out_width={W} below parent vertex width {K}")
 
     parent, stub, to, fwd, tidx = (cand[0], cand[1], cand[2], cand[3],
                                    cand[4])
@@ -254,14 +264,22 @@ def materialize_one(
     par_rows = jnp.take_along_axis(
         pol, m_idx[:, :, None], axis=1)                          # (G,Mc,K)
     new_v = jnp.take_along_axis(dst, f_idx, axis=-1)             # (G,Mc)
-    # Pad to K+1 slots, then scatter the new vertex at its DFS id
+    # Pad to W slots, then scatter the new vertex at its DFS id
     # (= ext.to for forward edges; patterns with back edges have
     # n_v < K so the write position is NOT necessarily the last slot).
-    child = jnp.concatenate(
-        [par_rows, jnp.full_like(par_rows[:, :, :1], PAD)], axis=-1)
-    slot = jnp.arange(K + 1) == to                               # (K+1,)
+    # Under bucketing W may equal K: the parent slot at ``to`` is PAD
+    # (the parent pattern has fewer than K real vertices), so the
+    # overwrite is always into a free slot.
+    if W > K:
+        child = jnp.concatenate(
+            [par_rows,
+             jnp.full(par_rows.shape[:-1] + (W - K,), PAD,
+                      par_rows.dtype)], axis=-1)
+    else:
+        child = par_rows
+    slot = jnp.arange(W) == to                                   # (W,)
     child = jnp.where(slot[None, None, :] & fwd.astype(bool),
-                      new_v[:, :, None], child)                  # (G,Mc,K+1)
+                      new_v[:, :, None], child)                  # (G,Mc,W)
     child = jnp.where(picked[:, :, None], child, PAD)
     overflow = (vsel.sum(dtype=jnp.int32)
                 - picked.sum(dtype=jnp.int32))
@@ -274,14 +292,17 @@ def materialize_ol(
     meta: jnp.ndarray,          # (C', 5) — surviving candidates only
     *,
     max_embeddings: int,
+    out_width: int | None = None,
 ) -> tuple[LevelOL, jnp.ndarray]:
     """Compacted child OLs for the surviving candidates (pass 2).
 
-    Returns the next LevelOL (K+1 vertex slots) and the per-candidate
-    overflow count (matches dropped by the M cap — exactness telemetry).
+    Returns the next LevelOL (``out_width`` vertex slots, default K+1)
+    and the per-candidate overflow count (matches dropped by the M cap
+    — exactness telemetry).
     """
     child, mask, over = jax.lax.map(
         lambda cand: materialize_one(level, eol_src, eol_dst, eol_mask,
-                                     cand, max_embeddings=max_embeddings),
+                                     cand, max_embeddings=max_embeddings,
+                                     out_width=out_width),
         meta)
     return LevelOL(child, mask), over

@@ -46,11 +46,21 @@ cap miss (n_keep > S) — fall back to the cheap materialize-only program
 from the *preserved* inputs (the wire's pass-1 supports stay valid); they
 cost extra syncs only when they fire.  Because such a retry consumes the
 parent OL store again, its buffers are donated only when no retry is
-possible: escalation disabled or M already at its ceiling, and S at its
-Cp maximum.  Donation here releases the parent store at program exit
-(the child store's shapes differ every level, so XLA cannot alias the
-buffers and warns); real input-output aliasing happens in
-``permute_stores``, whose outputs match its inputs exactly.
+possible: escalation disabled or M already at its ceiling, and S
+covering the full real candidate set (S >= C rules a cap miss out).
+
+Shape bucketing (``core/buckets.py``, DESIGN.md §9): the program is
+cached per STATIC config only — the true candidate count ``c_real``
+rides in as a traced scalar, so consecutive levels whose bucketed
+shapes (Cp, S, M, K, schedule rows) coincide reuse one compiled
+program instead of paying a fresh XLA compile per level.  The driver
+passes ``child_width`` (the bucketed child vertex-slot width; None
+reproduces the exact K+1 growth) and ``sched_floor`` (the fused
+schedule's row-bucket floor).  When bucketed shapes repeat, the donated
+parent store has exactly the child store's shape and XLA aliases the
+buffers — the donation arena — rather than merely freeing them at
+program exit; ``permute_stores`` aliases unconditionally (its outputs
+always match its inputs).
 """
 from __future__ import annotations
 
@@ -130,11 +140,16 @@ def lpt_permutation(cost: jnp.ndarray, n_workers: int) -> jnp.ndarray:
 
 
 @functools.lru_cache(maxsize=256)
-def _level_program(mmesh: MiningMesh, C_real: int, minsup: int,
+def _level_program(mmesh: MiningMesh, minsup: int,
                    backend: Backend, reduce: str, max_embeddings: int,
                    survivor_cap: int, rebalance: bool, threshold: float,
-                   donate: bool):
-    """Build (and cache per static config) the jitted level program."""
+                   donate: bool, child_width: Optional[int]):
+    """Build (and cache per static config) the jitted level program.
+
+    The true candidate count is a TRACED argument (``c_real``), not part
+    of the cache key: only bucketed quantities (shapes, the survivor
+    cap, M, the child vertex width) select a program, so levels with
+    coinciding buckets share one compile (DESIGN.md §9)."""
     axes = mmesh.axes
     W = mmesh.n_workers
     parts = mmesh.spec_parts()
@@ -144,7 +159,7 @@ def _level_program(mmesh: MiningMesh, C_real: int, minsup: int,
     S = survivor_cap
     with_rebalance = rebalance and W > 1
 
-    def core(*args):
+    def core(c_real, *args):
         if fused:
             sched_meta, tiles, inv, pol, pmask, src, dst, emask = args
             sup_pp, emb_s = fused_level_supports(
@@ -162,7 +177,7 @@ def _level_program(mmesh: MiningMesh, C_real: int, minsup: int,
         gsup, verdict = reduce_supports(local_sup, axes, minsup, reduce,
                                         gather_gsup=True)
         Cp = gsup.shape[0]
-        real = jnp.arange(Cp) < C_real
+        real = jnp.arange(Cp) < c_real
         keep = (verdict != 0) & real
 
         # verdict-masked prefix-sum compaction: survivor i's compact slot
@@ -181,6 +196,7 @@ def _level_program(mmesh: MiningMesh, C_real: int, minsup: int,
         # constant fill — unlike a vmapped select, padding costs ~nothing
         PP, _, G, _, K = pol.shape
         Mc = max_embeddings
+        Wk = child_width if child_width is not None else K + 1
 
         def per_slot(slot):
             cand, valid = slot
@@ -189,19 +205,19 @@ def _level_program(mmesh: MiningMesh, C_real: int, minsup: int,
                 ch, mk, over = jax.vmap(
                     lambda po, pm, s, d, e: materialize_one(
                         LevelOL(po, pm), s, d, e, cand,
-                        max_embeddings=Mc)
+                        max_embeddings=Mc, out_width=Wk)
                 )(pol, pmask, src, dst, emask)
                 return ch, mk, over.sum()
 
             def skip(_):
-                return (jnp.full((PP, G, Mc, K + 1), -1, jnp.int32),
+                return (jnp.full((PP, G, Mc, Wk), -1, jnp.int32),
                         jnp.zeros((PP, G, Mc), bool),
                         jnp.zeros((), jnp.int32))
 
             return jax.lax.cond(valid, do, skip, None)
 
         ol_s, mask_s, over_s = jax.lax.map(per_slot, (cmeta, valid_s))
-        ol = jnp.moveaxis(ol_s, 0, 1)           # (PP, S, G, Mc, K+1)
+        ol = jnp.moveaxis(ol_s, 0, 1)           # (PP, S, G, Mc, Wk)
         mask = jnp.moveaxis(mask_s, 0, 1)       # (PP, S, G, Mc)
         overflow = jax.lax.psum(over_s.sum(), axes)
         cost_pp = (emb_pp * real[None, :].astype(emb_pp.dtype)).sum(1)
@@ -210,7 +226,7 @@ def _level_program(mmesh: MiningMesh, C_real: int, minsup: int,
     n_meta = 3 if fused else 1
     smapped = jax_compat.shard_map(
         core, mesh=mmesh.mesh,
-        in_specs=(rep,) * n_meta + (parts,) * 5,
+        in_specs=(rep,) * (1 + n_meta) + (parts,) * 5,
         out_specs=(rep, rep, rep, parts, parts, parts), check_vma=False)
 
     def program(*args):
@@ -238,7 +254,10 @@ def _level_program(mmesh: MiningMesh, C_real: int, minsup: int,
 
     donate_argnums = ()
     if donate:
-        donate_argnums = (n_meta, n_meta + 1)   # the parent OL store
+        # the parent OL store (after c_real + the meta args).  With
+        # bucketed shapes the child store matches it exactly, so this
+        # is a true arena alias, not just an early free.
+        donate_argnums = (1 + n_meta, 2 + n_meta)
     return jax.jit(program, donate_argnums=donate_argnums)
 
 
@@ -295,6 +314,8 @@ def run_level(
     rebalance: bool,
     threshold: float,
     donate: bool,
+    child_width: Optional[int] = None,
+    sched_floor: Optional[int] = None,
 ) -> LevelOutputs:
     """Dispatch one level program and perform the single host sync.
 
@@ -302,19 +323,39 @@ def run_level(
     (same contract as ``map_reduce_supports``), so ``meta_p`` must be
     concrete.  Returns the unpacked wire plus the device-resident next
     level state; the caller owns retry policy (escalation / cap miss).
+
+    ``child_width`` is the (bucketed) child vertex-slot width, default
+    exact K+1; ``sched_floor`` buckets the fused schedule's row count
+    so consecutive levels present one static schedule shape.
     """
     Cp = meta_p.shape[0]
     n_partitions = pol.shape[0]
-    fn = _level_program(mmesh, C_real, minsup, backend, reduce,
+    fn = _level_program(mmesh, minsup, backend, reduce,
                         max_embeddings, survivor_cap, rebalance,
-                        threshold, donate)
+                        threshold, donate, child_width)
+    c_real = jnp.asarray(C_real, jnp.int32)
     if is_fused_backend(backend):
-        from .candgen import schedule_candidates
-        sched = schedule_candidates(np.asarray(meta_p))
-        out = fn(jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
+        from .buckets import bucket_size
+        from .candgen import pad_schedule, schedule_candidates
+        # only the real rows are scheduled (padded candidates would
+        # fragment the parent grouping); the row axis is then bucketed
+        # with whole invalid tiles and inv parked on one of them.  The
+        # bucketed schedule PINS tile_c: the adaptive halving picks a
+        # different width per level (a different kernel grid — a
+        # recompile); partial-tile waste is bounded by the row bucket
+        # and fully-invalid tiles are skipped inside the kernel.
+        if sched_floor is not None:
+            sched = schedule_candidates(np.asarray(meta_p)[:C_real],
+                                        max_inflation=float("inf"))
+            rows = bucket_size(sched.meta.shape[0], sched_floor)
+        else:
+            sched = schedule_candidates(np.asarray(meta_p)[:C_real])
+            rows = sched.meta.shape[0]
+        sched = pad_schedule(sched, rows_to=rows, inv_to=Cp)
+        out = fn(c_real, jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
                  jnp.asarray(sched.inv), pol, pmask, src, dst, emask)
     else:
-        out = fn(jnp.asarray(meta_p), pol, pmask, src, dst, emask)
+        out = fn(c_real, jnp.asarray(meta_p), pol, pmask, src, dst, emask)
     wire_d, new_pol, new_pmask = out
     # THE one device->host transfer of the level
     wire = unpack_wire(np.asarray(wire_d), C_real, Cp, n_partitions)

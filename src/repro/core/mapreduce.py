@@ -197,7 +197,8 @@ def map_reduce_supports(
 
 
 @functools.lru_cache(maxsize=64)
-def _materialize_program(mmesh: MiningMesh, max_embeddings: int):
+def _materialize_program(mmesh: MiningMesh, max_embeddings: int,
+                         out_width: Optional[int]):
     axes = mmesh.axes
     parts = mmesh.spec_parts()
     rep = mmesh.replicated()
@@ -206,7 +207,7 @@ def _materialize_program(mmesh: MiningMesh, max_embeddings: int):
         def per_part(po, pm, s, d, e):
             lvl, over = materialize_ol(
                 LevelOL(po, pm), s, d, e, meta,
-                max_embeddings=max_embeddings)
+                max_embeddings=max_embeddings, out_width=out_width)
             return lvl.ol, lvl.mask, over.sum()
         ol, mask, over = jax.vmap(per_part)(pol, pmask, src, dst, emask)
         return ol, mask, jax.lax.psum(over.sum(), axes)
@@ -227,9 +228,11 @@ def map_materialize(
     emask: jnp.ndarray,
     *,
     max_embeddings: int,
+    out_width: Optional[int] = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, int]:
     """Pass 2: build next level's OL store for survivors (data-local; the
-    only collective is the overflow-telemetry psum)."""
-    fn = _materialize_program(mmesh, max_embeddings)
+    only collective is the overflow-telemetry psum).  ``out_width``
+    forwards the bucketed child vertex-slot width (None = exact K+1)."""
+    fn = _materialize_program(mmesh, max_embeddings, out_width)
     ol, mask, overflow = fn(keep_meta, pol, pmask, src, dst, emask)
     return ol, mask, int(np.asarray(overflow))

@@ -49,6 +49,7 @@ import numpy as np
 
 from ..kernels.ops import Backend, default_backend
 from ..runtime import checkpoint as ckpt
+from .buckets import BucketSpec, bucket_size, round_up_multiple
 from .candgen import Candidate, EdgeAlphabet, generate_candidates
 from .dfscode import Code, array_to_code, code_to_array
 from .embedding import build_edge_ol, candidate_meta, level1_ol
@@ -81,6 +82,15 @@ class MirageConfig:
     donate: bool = True                 # donate OL buffers when retry-free
     predict_survivors: bool = True      # shrink the survivor cap from history
     survivor_slack: float = 2.0         # cap = slack * predicted survivors
+    # ---- shape bucketing (single_sync pipeline; DESIGN.md §9) --------
+    # round the per-level shapes (Cp, S, P, M, K, fused-schedule rows)
+    # up to the geometric family floor·2^i so consecutive levels hit the
+    # jit cache instead of recompiling, and the donated parent/child
+    # stores alias as one arena.  Padded slots are masked end-to-end.
+    bucket_shapes: bool = True
+    bucket_c_floor: int = 64            # candidate axis Cp (+ sched rows)
+    bucket_s_floor: int = 32            # survivor cap S / parent axis P
+    bucket_k_floor: int = 8             # OL vertex-slot axis K
 
     def __post_init__(self):
         if self.pipeline not in PIPELINES:
@@ -215,10 +225,20 @@ class Mirage:
         codes = [((0, 1, a, e, b),) for (a, e, b) in alphabet.canonical()]
         # level-1 embeddings/graph are bounded by F (the edge-OL width), so
         # M1 = F is exact by construction — no silent truncation at level 1.
-        lvl1 = [level1_ol(codes, e, max_embeddings=max(cfg.max_embeddings, F))
-                for e in eols]
+        bk = self._buckets()
+        M1 = max(cfg.max_embeddings, F)
+        if bk is not None:
+            M1 = bk.embeddings(M1, cfg.max_embeddings)
+        lvl1 = [level1_ol(codes, e, max_embeddings=M1) for e in eols]
         pol = np.stack([np.asarray(l.ol) for l in lvl1])           # (NP,P,G,M,2)
         pmask = np.stack([np.asarray(l.mask) for l in lvl1])
+        if bk is not None:
+            # bucket the level-1 store into the same (P, K) family the
+            # child stores live in, so the level-2 program is often THE
+            # program every later level reuses
+            pol, pmask = _pad_store(
+                pol, pmask, p_to=bucket_size(len(codes), bk.s_floor),
+                k_to=bk.vertex_slots(2))
 
         supports: dict[Code, int] = {}
         for c in codes:
@@ -240,6 +260,15 @@ class Mirage:
             start_level = int(resume_meta["step"])
             M = int(state["max_embeddings"])
             total_overflow = int(state["total_overflow"])
+            if bk is not None:
+                # checkpoints store the CANONICAL (unpadded) survivor
+                # store; re-bucket it into the CURRENT config's family —
+                # the writer may have used different floors (or none)
+                pol, pmask = _pad_store(
+                    pol, pmask,
+                    p_to=bucket_size(pol.shape[1], bk.s_floor),
+                    m_to=bk.embeddings(pol.shape[3], cfg.max_embeddings),
+                    k_to=bk.vertex_slots(pol.shape[-1]))
 
         pol, pmask, src_d, dst_d, emask_d = self._device_put(
             pol, pmask, src, dst, emask)
@@ -261,7 +290,8 @@ class Mirage:
                 break
             meta = candidate_meta(cands, eol0)
             C = meta.shape[0]
-            Cp = _round_up(C, self.mesh.n_workers)
+            Cp = (bk.candidates(C, self.mesh.n_workers) if bk is not None
+                  else round_up_multiple(C, self.mesh.n_workers))
             meta_p = np.concatenate(
                 [meta, np.tile([[0, 0, 0, 1, 0]], (Cp - C, 1))]).astype(np.int32)
 
@@ -270,9 +300,14 @@ class Mirage:
                     meta_p, meta, C, pol, pmask, src_d, dst_d, emask_d,
                     minsup, M, n_parts)
             else:
+                # child patterns (size k+1) have at most k+2 vertices;
+                # the bucketed width reuses the parent store's while the
+                # child still fits, so the arena shape repeats
+                child_width = (bk.vertex_slots(k + 2, int(pol.shape[-1]))
+                               if bk is not None else None)
                 out = self._level_single_sync(
                     meta_p, meta, C, pol, pmask, src_d, dst_d, emask_d,
-                    minsup, M, ratios)
+                    minsup, M, ratios, child_width)
             M = out.max_embeddings
             total_overflow += out.overflow
 
@@ -306,6 +341,17 @@ class Mirage:
                                 total_overflow)
 
     # ------------------------------------------------------------------
+    def _buckets(self) -> Optional[BucketSpec]:
+        """The run's shape-bucket family, or None when bucketing is off.
+        The legacy pipeline never buckets — it is the PR-1 differential
+        oracle and must stay bit-identical to it."""
+        cfg = self.cfg
+        if not cfg.bucket_shapes or cfg.pipeline != "single_sync":
+            return None
+        return BucketSpec(cfg.bucket_c_floor, cfg.bucket_s_floor,
+                          cfg.bucket_k_floor)
+
+    # ------------------------------------------------------------------
     def _survivor_cap(self, C: int, Cp: int, ratios: list[float]) -> int:
         """Static survivor cap for the level program's compaction stage.
 
@@ -314,17 +360,34 @@ class Mirage:
         the child store's HBM footprint; a miss costs one
         materialize-only retry dispatch (the pass-1 supports stay
         valid).  Policy: slack × the worst recent survival ratio, or a
-        quarter of the candidate space when there is no history yet."""
+        quarter of the candidate space when there is no history yet.
+
+        Under shape bucketing the prediction is rounded to the S-bucket
+        family and clamped at the (bucketed) Cp ceiling: a cap miss
+        then retries into the NEXT family member, and near-boundary
+        predictions cannot thrash between adjacent raw values — both
+        would recompile the level program every flip."""
+        bk = self._buckets()
         if not self.cfg.predict_survivors:
-            return Cp
+            # no prediction = no cap miss allowed: S must cover every
+            # real candidate.  Bucketed, the smallest S-family member
+            # >= C keeps the arena in the same shape family as the
+            # parent axis instead of jumping to the C family.
+            return Cp if bk is None else bk.survivors(C, Cp)
         if not ratios:
-            return min(Cp, max(32, -(-Cp // 4)))
-        r = max(ratios[-2:])
-        return min(Cp, max(1, int(np.ceil(
-            self.cfg.survivor_slack * r * C)) + 16))
+            s = min(Cp, max(32, -(-Cp // 4)))
+        else:
+            r = max(ratios[-2:])
+            s = min(Cp, max(1, int(np.ceil(
+                self.cfg.survivor_slack * r * C)) + 16))
+        if bk is not None:
+            s = bk.survivors(s, Cp)
+        return s
 
     def _level_single_sync(self, meta_p, meta, C, pol, pmask, src, dst,
-                           emask, minsup, M, ratios) -> _LevelOutcome:
+                           emask, minsup, M, ratios,
+                           child_width: Optional[int] = None
+                           ) -> _LevelOutcome:
         """One level through the device-resident program: a single
         dispatch and a single device→host sync on the wire vector.
 
@@ -334,18 +397,23 @@ class Mirage:
         set, and the escalation valve re-materializes at a doubled M.
         Donation is engaged only when no such retry is possible."""
         cfg = self.cfg
+        bk = self._buckets()
         Cp = meta_p.shape[0]
         backend = cfg.backend or default_backend()
         S = self._survivor_cap(C, Cp, ratios)
-        may_retry = (S < Cp or (cfg.escalate_on_overflow
-                                and M < cfg.max_embeddings_limit))
+        # a cap miss needs n_keep > S, and n_keep <= C always — S >= C
+        # rules the retry out even when S sits below the padded Cp
+        may_retry = (S < C or (cfg.escalate_on_overflow
+                               and M < cfg.max_embeddings_limit))
         t_map = time.perf_counter()
         out = run_level(
             self.mesh, meta_p, C, pol, pmask, src, dst, emask,
             minsup=minsup, backend=backend, reduce=cfg.reduce,
             max_embeddings=M, survivor_cap=S,
             rebalance=cfg.rebalance, threshold=cfg.rebalance_threshold,
-            donate=cfg.donate and not may_retry)
+            donate=cfg.donate and not may_retry,
+            child_width=child_width,
+            sched_floor=bk.c_floor if bk is not None else None)
         w = out.wire
         map_secs = time.perf_counter() - t_map
 
@@ -353,8 +421,14 @@ class Mirage:
         n = int(w.n_keep)
         overflow = w.overflow
         escalations = 0
-        new_pol = out.pol[:, :max(n, 1)]
-        new_pmask = out.pmask[:, :max(n, 1)]
+        if bk is None:
+            new_pol = out.pol[:, :max(n, 1)]
+            new_pmask = out.pmask[:, :max(n, 1)]
+        else:
+            # keep the full S-bucket arena: slicing to the survivor
+            # count would hand the next level a fresh shape (and a
+            # fresh compile) every time n moves
+            new_pol, new_pmask = out.pol, out.pmask
 
         escalatable = (cfg.escalate_on_overflow
                        and M < cfg.max_embeddings_limit)
@@ -366,8 +440,14 @@ class Mirage:
                 M = min(M * 2, cfg.max_embeddings_limit)
                 escalations += 1
             new_pol, new_pmask, overflow, M, esc = self._materialize_exact(
-                jnp.asarray(meta[keep]), pol, pmask, src, dst, emask, M)
+                jnp.asarray(meta[keep]), pol, pmask, src, dst, emask, M,
+                out_width=child_width)
             escalations += esc
+            if bk is not None:
+                # re-bucket the retried store so the next level stays in
+                # the family (the cap miss means n outgrew S's bucket)
+                new_pol, new_pmask = _pad_store(
+                    new_pol, new_pmask, p_to=bk.survivors(len(keep), Cp))
 
         if w.rebalanced and n > 0:
             # apply the wire-reported LPT permutation on device (no sync)
@@ -426,7 +506,8 @@ class Mirage:
             perm=perm, map_seconds=map_secs, escalations=escalations)
 
     # ------------------------------------------------------------------
-    def _materialize_exact(self, keep_meta, pol, pmask, src, dst, emask, M):
+    def _materialize_exact(self, keep_meta, pol, pmask, src, dst, emask, M,
+                           out_width: Optional[int] = None):
         """Materialize survivors; escalate M until no overflow (exactness
         valve — keeps device supports == paper semantics)."""
         cfg = self.cfg
@@ -434,7 +515,7 @@ class Mirage:
         while True:
             new_pol, new_pmask, overflow = map_materialize(
                 self.mesh, keep_meta, pol, pmask, src, dst, emask,
-                max_embeddings=M)
+                max_embeddings=M, out_width=out_width)
             if (overflow == 0 or not cfg.escalate_on_overflow
                     or M >= cfg.max_embeddings_limit):
                 return new_pol, new_pmask, overflow, M, escalations
@@ -455,21 +536,52 @@ class Mirage:
         inv = np.empty_like(order)
         inv[order] = np.arange(len(order))
         max_edges = max(len(c) for l in levels for c in l)
+        pol_np, pmask_np = np.asarray(pol)[inv], np.asarray(pmask)[inv]
+        # checkpoints hold the CANONICAL store: bucket padding is
+        # stripped (pattern axis to the true survivor count, vertex axis
+        # to the widest real pattern) so a resume under different bucket
+        # floors — or none — re-pads into ITS family without inheriting
+        # the writer's.  Unbucketed stores pass through unchanged.
+        n_real = max(len(levels[-1]), 1)
+        pol_np, pmask_np = pol_np[:, :n_real], pmask_np[:, :n_real]
+        if self._buckets() is not None:
+            kw = 1 + max(max(i, j) for c in levels[-1]
+                         for (i, j, _a, _e, _b) in c)
+            pol_np = pol_np[..., :kw]
         state = {
             "levels": [[code_to_array(c, max_edges) for c in l]
                        for l in levels],
             "support_codes": [code_to_array(c, max_edges) for c in supports],
             "support_vals": np.asarray(list(supports.values()), np.int64),
-            "pol": np.asarray(pol)[inv],
-            "pmask": np.asarray(pmask)[inv],
+            "pol": pol_np,
+            "pmask": pmask_np,
             "max_embeddings": M,
             "total_overflow": overflow,
         }
         ckpt.save_step(root, level, state, metadata={"kind": "mirage-mining"})
 
 
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
+def _pad_store(pol, pmask, *, p_to: Optional[int] = None,
+               m_to: Optional[int] = None, k_to: Optional[int] = None):
+    """Grow an OL store (NP, P, G, M, K)/(NP, P, G, M) into its bucket:
+    PAD(-1) vertex entries, all-False masks.  Padded slots are inert —
+    no candidate references a padded parent, masked embeddings never
+    join, PAD vertex slots never match.  Works on numpy or device
+    arrays (np.pad falls back to jnp dispatch via asarray semantics)."""
+    xp = np if isinstance(pol, np.ndarray) else jnp
+
+    def pad(a, axis, to):
+        cur = a.shape[axis]
+        if to is None or to <= cur:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, to - cur)
+        fill = -1 if a.dtype == xp.int32 else False
+        return xp.pad(a, widths, constant_values=fill)
+
+    pol = pad(pad(pad(pol, 1, p_to), 3, m_to), 4, k_to)
+    pmask = pad(pad(pmask, 1, p_to), 3, m_to)
+    return pol, pmask
 
 
 def _pad_f(a: np.ndarray, F: int, fill) -> np.ndarray:

@@ -59,46 +59,61 @@ def _fused_kernel(meta_ref, tiles_ref, pol_ref, pmask_ref, src_ref, dst_ref,
         sup_ref[...] = jnp.zeros_like(sup_ref)
         emb_ref[...] = jnp.zeros_like(emb_ref)
 
-    pol = pol_ref[0, 0]          # (TG, M, K) int32 — block's shared parent
-    pmask = pmask_ref[0, 0]      # (TG, M) int8
-    src = src_ref[0, 0]          # (TG, F) int32 — block's shared triple
-    dst = dst_ref[0, 0]          # (TG, F) int32
-    emask = emask_ref[0, 0]      # (TG, F) int8
-    tg, m, k = pol.shape
-    f = src.shape[-1]
+    # Shape bucketing pads the schedule with whole valid=0 tiles
+    # (descriptor (0, 0)); their output blocks stay at the init zeros,
+    # so the entire join is skipped, not just masked — the bucket tail
+    # costs HBM streaming of one (already-resident) tile index, no VPU.
+    tile_valid = meta_ref[ct * tile_c, 5]
+    for i in range(1, tile_c):   # static unroll — TC is a compile constant
+        tile_valid = tile_valid | meta_ref[ct * tile_c + i, 5]
 
-    kids = jax.lax.broadcasted_iota(jnp.int32, (tg, m, k), 2)
-    pair_ok = (pmask[:, :, None] != 0) & (emask[:, None, :] != 0)
+    @pl.when(tile_valid != 0)
+    def _compute():
+        pol = pol_ref[0, 0]      # (TG, M, K) int32 — block's shared parent
+        pmask = pmask_ref[0, 0]  # (TG, M) int8
+        src = src_ref[0, 0]      # (TG, F) int32 — block's shared triple
+        dst = dst_ref[0, 0]      # (TG, F) int32
+        emask = emask_ref[0, 0]  # (TG, F) int8
+        tg, m, k = pol.shape
+        f = src.shape[-1]
 
-    # forward-edge membership test (new endpoint must not be a parent
-    # vertex) depends only on (pol, dst) — computed ONCE per block and
-    # shared by all tile_c candidates, where the per-candidate grid paid
-    # the O(M·F·K) loop per candidate.
-    def body(kk, acc):
-        col = jax.lax.dynamic_index_in_dim(pol, kk, axis=2, keepdims=False)
-        return acc | (dst[:, None, :] == col[:, :, None])
+        kids = jax.lax.broadcasted_iota(jnp.int32, (tg, m, k), 2)
+        pair_ok = (pmask[:, :, None] != 0) & (emask[:, None, :] != 0)
 
-    member = jax.lax.fori_loop(
-        0, k, body, jnp.zeros((tg, m, f), jnp.bool_))
+        # forward-edge membership test (new endpoint must not be a parent
+        # vertex) depends only on (pol, dst) — computed ONCE per block and
+        # shared by all tile_c candidates, where the per-candidate grid
+        # paid the O(M·F·K) loop per candidate.  Bucket-padded K slots
+        # hold PAD (-1) and can never match a real endpoint (ids >= 0).
+        def body(kk, acc):
+            col = jax.lax.dynamic_index_in_dim(pol, kk, axis=2,
+                                               keepdims=False)
+            return acc | (dst[:, None, :] == col[:, :, None])
 
-    sups, embs = [], []
-    for i in range(tile_c):      # static unroll — TC is a compile constant
-        row = ct * tile_c + i
-        stub = meta_ref[row, 1]
-        to = meta_ref[row, 2]
-        fwd = meta_ref[row, 3]
-        valid = meta_ref[row, 5]
+        member = jax.lax.fori_loop(
+            0, k, body, jnp.zeros((tg, m, f), jnp.bool_))
 
-        stub_vals = jnp.sum(jnp.where(kids == stub, pol, 0), axis=-1)  # (TG,M)
-        to_vals = jnp.sum(jnp.where(kids == to, pol, 0), axis=-1)      # (TG,M)
-        ok = (src[:, None, :] == stub_vals[:, :, None]) & pair_ok      # (TG,M,F)
-        ok &= jnp.where(fwd == 1, ~member,
-                        dst[:, None, :] == to_vals[:, :, None])
-        sups.append(jnp.sum(ok.any(axis=(1, 2)).astype(jnp.int32)) * valid)
-        embs.append(ok.sum(dtype=jnp.int32) * valid)
+        sups, embs = [], []
+        for i in range(tile_c):
+            row = ct * tile_c + i
+            stub = meta_ref[row, 1]
+            to = meta_ref[row, 2]
+            fwd = meta_ref[row, 3]
+            valid = meta_ref[row, 5]
 
-    sup_ref[0] += jnp.stack(sups)
-    emb_ref[0] += jnp.stack(embs)
+            stub_vals = jnp.sum(jnp.where(kids == stub, pol, 0),
+                                axis=-1)                           # (TG,M)
+            to_vals = jnp.sum(jnp.where(kids == to, pol, 0),
+                              axis=-1)                             # (TG,M)
+            ok = (src[:, None, :] == stub_vals[:, :, None]) & pair_ok
+            ok &= jnp.where(fwd == 1, ~member,
+                            dst[:, None, :] == to_vals[:, :, None])
+            sups.append(jnp.sum(ok.any(axis=(1, 2)).astype(jnp.int32))
+                        * valid)
+            embs.append(ok.sum(dtype=jnp.int32) * valid)
+
+        sup_ref[0] += jnp.stack(sups)
+        emb_ref[0] += jnp.stack(embs)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_g", "interpret"))

@@ -32,6 +32,12 @@ def main() -> None:
                     help="single_sync: one device program + one host "
                          "sync per level (default); legacy: the PR-1 "
                          "two-program driver")
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="disable shape bucketing (one XLA compile per "
+                         "mining level instead of per bucket family)")
+    ap.add_argument("--bucket-floors", default=None, metavar="C,S,K",
+                    help="bucket family floors for the candidate axis, "
+                         "survivor cap and vertex slots (default 64,32,8)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -50,11 +56,17 @@ def main() -> None:
         graphs = random_db(args.n_graphs, seed=args.seed)
 
     minsup = args.minsup if args.minsup < 1 else int(args.minsup)
+    bucket_kw = {}
+    if args.bucket_floors:
+        c, s, k = (int(x) for x in args.bucket_floors.split(","))
+        bucket_kw = dict(bucket_c_floor=c, bucket_s_floor=s,
+                         bucket_k_floor=k)
     cfg = MirageConfig(
         minsup=minsup, n_partitions=args.partitions, scheme=args.scheme,
         max_size=args.max_size, max_embeddings=args.max_embeddings,
         reduce=args.reduce, backend=args.backend,
-        pipeline=args.pipeline, checkpoint_dir=args.ckpt_dir)
+        pipeline=args.pipeline, checkpoint_dir=args.ckpt_dir,
+        bucket_shapes=not args.no_bucket, **bucket_kw)
 
     t0 = time.perf_counter()
     res = Mirage(cfg).fit(graphs, resume=args.resume)

@@ -1,0 +1,156 @@
+"""Compile-count regression: shape bucketing must let consecutive
+levels hit the `_level_program` jit cache (DESIGN.md §9).
+
+A compiled program is identified by (lru-cache key, input shape
+signature): the lru key carries every static config (minsup, backend,
+S, M, child vertex width, donation), the shapes carry Cp / store
+buckets / schedule rows — two level dispatches agreeing on BOTH run the
+same XLA executable, two differing on EITHER pay a fresh compile.  The
+tracer below records exactly that pair per dispatch, so the asserted
+counts are compile counts, not cache-info proxies.
+
+The DB is a set of identical label-free path graphs: every level keeps
+exactly one frequent pattern (the path), candidate counts stay tiny and
+flat, and mining runs as deep as max_size allows — the pathological
+case for per-level recompiles (the unbucketed pipeline compiles one
+program PER level because the vertex-slot axis K grows every level).
+"""
+import numpy as np
+import pytest
+
+import jax._src.array as _jarr
+
+from repro.core import level_step, mining
+from repro.core.graphdb import Graph
+from repro.core.host_miner import mine_host
+from repro.core.mining import Mirage, MirageConfig
+
+
+def path_db(n_graphs=6, length=9):
+    def path(n):
+        return Graph(np.zeros(n, np.int32),
+                     np.stack([np.arange(n - 1), np.arange(1, n)], 1),
+                     np.zeros(n - 1, np.int32))
+    return [path(length) for _ in range(n_graphs)]
+
+
+class _ProgramTracer:
+    """Record one (static key, arg shapes) signature per dispatch —
+    the exact identity XLA compiles under."""
+
+    def __init__(self, monkeypatch):
+        self.signatures = set()
+        orig = level_step._level_program
+
+        def traced(*key):
+            fn = orig(*key)
+
+            def wrapper(*args):
+                self.signatures.add(
+                    (key, tuple(np.shape(a) for a in args)))
+                return fn(*args)
+            return wrapper
+
+        monkeypatch.setattr(level_step, "_level_program", traced)
+
+    @property
+    def n_compiles(self):
+        return len(self.signatures)
+
+
+def _mine(bucket: bool, monkeypatch, graphs=None, **kw):
+    tracer = _ProgramTracer(monkeypatch)
+    cfg = MirageConfig(minsup=6, n_partitions=2, max_size=8,
+                       bucket_shapes=bucket, **kw)
+    res = Mirage(cfg).fit(path_db() if graphs is None else graphs)
+    return res, tracer
+
+
+def test_bucketing_caps_compiles_on_deep_run(monkeypatch):
+    """>=6 levels, <=3 distinct compiles bucketed vs one-per-level
+    unbucketed — the tentpole contract."""
+    graphs = path_db()
+    ref = mine_host(graphs, 6, max_size=8)
+
+    res_b, tr_b = _mine(True, monkeypatch)
+    assert len(res_b.stats) >= 6, "DB must mine at least 6 levels"
+    assert tr_b.n_compiles <= 3, (
+        f"{tr_b.n_compiles} distinct level programs for "
+        f"{len(res_b.stats)} levels with bucketing on")
+
+    res_u, tr_u = _mine(False, monkeypatch)
+    assert tr_u.n_compiles >= len(res_u.stats), (
+        "unbucketed levels each present a fresh shape (K grows)")
+
+    # bucketed, unbucketed, legacy and the host oracle agree bit-for-bit
+    # on real slots
+    res_l = Mirage(MirageConfig(minsup=6, n_partitions=2, max_size=8,
+                                pipeline="legacy")).fit(graphs)
+    assert sorted(res_b.supports.items()) == sorted(res_u.supports.items())
+    assert sorted(res_b.supports.items()) == sorted(res_l.supports.items())
+    assert sorted(res_b.supports.items()) == sorted(
+        (c, i.support) for c, i in ref.frequent.items())
+
+
+def test_bucketed_run_keeps_one_sync_per_level(monkeypatch):
+    """The PR-2 wire contract survives bucketing: exactly one
+    device→host transfer per mined level (counted at jax's ArrayImpl
+    fetch point), padding never adds a sync."""
+    graphs = path_db()
+    cfg = MirageConfig(minsup=6, n_partitions=2, max_size=6,
+                       bucket_shapes=True)
+
+    counts = {"n": 0}
+    orig = _jarr.ArrayImpl._value
+
+    def counting(self):
+        counts["n"] += 1
+        return orig.fget(self)
+
+    _jarr.ArrayImpl._value = property(counting)
+    try:
+        res = Mirage(cfg).fit(graphs)
+    finally:
+        _jarr.ArrayImpl._value = orig
+
+    assert sum(st.escalations for st in res.stats) == 0
+    assert counts["n"] == len(res.stats), (
+        f"{counts['n']} device→host transfers for {len(res.stats)} levels")
+
+
+def test_bucketed_wire_supports_match_legacy(monkeypatch):
+    """Every level's wire support vector (real slots) must match the
+    legacy two-program driver's — bucket padding cannot leak into the
+    packed wire."""
+    graphs = path_db(n_graphs=5, length=8)
+    wires = []
+    orig = mining.run_level
+
+    def spy(*args, **kw):
+        out = orig(*args, **kw)
+        wires.append(np.asarray(out.wire.gsup))
+        return out
+
+    monkeypatch.setattr(mining, "run_level", spy)
+    res = Mirage(MirageConfig(minsup=5, n_partitions=1, max_size=5,
+                              bucket_shapes=True)).fit(graphs)
+    monkeypatch.setattr(mining, "run_level", orig)
+
+    legacy = Mirage(MirageConfig(minsup=5, n_partitions=1, max_size=5,
+                                 pipeline="legacy")).fit(graphs)
+    assert sorted(res.supports.items()) == sorted(legacy.supports.items())
+    assert len(wires) == len(res.stats)
+    for st, gsup in zip(res.stats, wires):
+        assert gsup.shape[0] == st.n_candidates  # unpack slices padding off
+
+
+def test_fused_schedule_bucketing_matches_ref(monkeypatch):
+    """The fused backend's bucketed schedule (invalid pad tiles, parked
+    inverse permutation) must agree with the ref backend compile-for-
+    compile and support-for-support."""
+    res_f, tr_f = _mine(True, monkeypatch, backend="fused_interpret")
+    assert tr_f.n_compiles <= 3
+    res_r = Mirage(MirageConfig(minsup=6, n_partitions=2, max_size=8,
+                                bucket_shapes=True,
+                                backend="ref")).fit(path_db())
+    assert sorted(res_f.supports.items()) == sorted(res_r.supports.items())

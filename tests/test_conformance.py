@@ -11,6 +11,11 @@ A deeper Hypothesis-driven sweep rides along when hypothesis is
 installed (random DBs, random configs); the seeded matrix above is the
 always-on floor.
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import numpy as np
 import pytest
@@ -108,6 +113,90 @@ def test_escalation_valve_respects_ceiling():
 
 
 # ---------------------------------------------------------------------------
+# checkpoint/resume across bucket boundaries (runtime/checkpoint.py
+# padding round-trips: save and resume may disagree on bucket floors —
+# or on bucketing at all — AND on worker count)
+# ---------------------------------------------------------------------------
+
+RESUME_BUCKET_SNIPPET = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax
+    from repro.core.graphdb import pubchem_like_db
+    from repro.core.host_miner import mine_host
+    from repro.core.mapreduce import MiningMesh
+    from repro.core.mining import Mirage, MirageConfig
+    from repro.runtime import jax_compat
+
+    ck = sys.argv[1]
+    graphs = pubchem_like_db(24, seed=31, avg_edges=10)
+    ref = mine_host(graphs, 6, max_size=4)
+
+    def mesh(w):
+        return MiningMesh(jax_compat.make_mesh((w,), ("w",)))
+
+    def check(res, tag):
+        assert [set(l) for l in res.levels] == \\
+            [set(l) for l in ref.levels], tag
+        for code, sup in res.supports.items():
+            assert sup == ref.frequent[code].support, (tag, code)
+
+    # phase 1: 2 levels on TWO workers under SMALL bucket floors
+    cfg = MirageConfig(minsup=6, n_partitions=4, max_size=2,
+                       checkpoint_dir=ck, bucket_shapes=True,
+                       bucket_c_floor=8, bucket_s_floor=4,
+                       bucket_k_floor=4)
+    Mirage(cfg, mesh(2)).fit(graphs)
+
+    # phase 2: resume to completion on ONE worker at a DIFFERENT bucket
+    # boundary (every floor changed) — the checkpoint's canonical store
+    # must re-pad into the new family
+    cfg2 = MirageConfig(minsup=6, n_partitions=4, max_size=4,
+                        checkpoint_dir=ck, bucket_shapes=True,
+                        bucket_c_floor=32, bucket_s_floor=16,
+                        bucket_k_floor=8)
+    check(Mirage(cfg2, mesh(1)).fit(graphs, resume=True), "rebucket")
+
+    # phase 3: the SAME checkpoint resumed with bucketing OFF on two
+    # workers — padding must not have leaked into the saved state
+    cfg3 = MirageConfig(minsup=6, n_partitions=4, max_size=4,
+                        checkpoint_dir=ck, bucket_shapes=False)
+    check(Mirage(cfg3, mesh(2)).fit(graphs, resume=True), "unbucketed")
+
+    # phase 4: an UNBUCKETED checkpoint resumed bucketed (reverse trip)
+    ck2 = ck + "-rev"
+    cfg4 = MirageConfig(minsup=6, n_partitions=4, max_size=2,
+                        checkpoint_dir=ck2, bucket_shapes=False)
+    Mirage(cfg4, mesh(1)).fit(graphs)
+    cfg5 = MirageConfig(minsup=6, n_partitions=4, max_size=4,
+                        checkpoint_dir=ck2, bucket_shapes=True,
+                        bucket_c_floor=16, bucket_s_floor=8,
+                        bucket_k_floor=8)
+    check(Mirage(cfg5, mesh(2)).fit(graphs, resume=True), "adopt")
+    print("RESUME-BUCKET-OK")
+""")
+
+
+def _run_snippet(snippet, *argv, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", snippet, *map(str, argv)],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_resume_across_bucket_boundaries(tmp_path):
+    """A checkpoint written at one bucket boundary resumes at another
+    (and with a different worker count, and with bucketing toggled both
+    ways) bit-identically to the host oracle."""
+    assert "RESUME-BUCKET-OK" in _run_snippet(
+        RESUME_BUCKET_SNIPPET, tmp_path / "ck")
+
+
+# ---------------------------------------------------------------------------
 # hypothesis sweep (optional dependency)
 # ---------------------------------------------------------------------------
 
@@ -141,3 +230,31 @@ if _HAVE_HYP:
                            backend=resolve_backend(backend))
         res = Mirage(cfg).fit(graphs)
         assert canon_dist(res) == canon_host(ref), (backend, reduce, scheme)
+
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(small_dbs(),
+           st.sampled_from([4, 16, 64]),        # bucket_c_floor
+           st.sampled_from([2, 8, 32]),         # bucket_s_floor (2 forces
+           st.sampled_from([4, 8]),             #   cap-miss retries)
+           st.sampled_from(["fused_interpret", "ref"]),
+           st.booleans())
+    def test_bucketing_never_leaks_hypothesis(graphs, c_floor, s_floor,
+                                              k_floor, backend, predict):
+        """For ANY bucket-floor family, the bucketed pipeline, the
+        unbucketed pipeline, and the host oracle return identical
+        frequent sets and supports — padding must never reach verdicts,
+        caps, or the compaction."""
+        minsup = max(2, len(graphs) // 3)
+        ref = mine_host(graphs, minsup, max_size=3)
+        base = dict(minsup=minsup, n_partitions=2, max_size=3,
+                    backend=resolve_backend(backend),
+                    predict_survivors=predict)
+        res_b = Mirage(MirageConfig(
+            bucket_shapes=True, bucket_c_floor=c_floor,
+            bucket_s_floor=s_floor, bucket_k_floor=k_floor,
+            **base)).fit(graphs)
+        res_u = Mirage(MirageConfig(bucket_shapes=False, **base)).fit(graphs)
+        key = (c_floor, s_floor, k_floor, backend, predict)
+        assert canon_dist(res_b) == canon_dist(res_u), key
+        assert canon_dist(res_b) == canon_host(ref), key

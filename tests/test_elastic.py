@@ -131,6 +131,21 @@ SKEW_SNIPPET = textwrap.dedent("""
     assert sorted(res.supports.items()) == sorted(res2.supports.items())
     for code, sup in res.supports.items():
         assert sup == ref.frequent[code].support
+
+    # shape bucketing must not leak padding into the LPT cost signal:
+    # the same skewed DB under small bucket floors must still trip the
+    # repack AND still be invisible in the results (padded candidates
+    # contribute zero embed-cost; padded partitions don't exist)
+    cfg3 = MirageConfig(minsup=6, n_partitions=4, scheme=1, max_size=3,
+                        rebalance=True, rebalance_threshold=1.1,
+                        bucket_shapes=True, bucket_c_floor=8,
+                        bucket_s_floor=4, bucket_k_floor=4)
+    res3 = Mirage(cfg3, mesh).fit(graphs)
+    assert any(s.rebalanced for s in res3.stats), \\
+        [s.imbalance for s in res3.stats]
+    assert sorted(res3.supports.items()) == sorted(res2.supports.items())
+    for a, b in zip(res.stats, res3.stats):
+        assert abs(a.imbalance - b.imbalance) < 1e-3, (a, b)
     print("SKEW-OK")
 """)
 

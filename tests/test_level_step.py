@@ -143,6 +143,103 @@ def test_survivor_cap_miss_retries_exactly(monkeypatch):
         assert sup == ref.frequent[code].support, code
 
 
+def test_survivor_cap_rounds_to_bucket_family():
+    """Bucketed cap predictions must land in the floor·2^i family,
+    clamp at the (bucketed) Cp ceiling, and — the anti-thrash
+    property — map near-boundary predictions to ONE bucket instead of
+    flipping the compiled program between adjacent raw caps."""
+    cfg = MirageConfig(minsup=2, n_partitions=1, bucket_shapes=True,
+                       bucket_s_floor=8, bucket_c_floor=16)
+    m = Mirage(cfg)
+    Cp, C = 64, 60
+    family = {8, 16, 32, 64}
+    assert m._survivor_cap(C, Cp, []) in family
+    for r in (0.01, 0.2, 0.35, 0.6, 0.99):
+        s = m._survivor_cap(C, Cp, [r])
+        assert s in family, (r, s)
+        assert s <= Cp
+        # never below the unbucketed prediction (a cap that can hold
+        # fewer survivors than predicted would guarantee retries)
+        raw = Mirage(MirageConfig(minsup=2, n_partitions=1,
+                                  bucket_shapes=False))._survivor_cap(
+                                      C, Cp, [r])
+        assert s >= min(raw, Cp), (r, s, raw)
+    # two near-boundary ratios whose RAW caps differ must share a bucket
+    raw_a = Mirage(MirageConfig(minsup=2, n_partitions=1,
+                                bucket_shapes=False))._survivor_cap(
+                                    C, Cp, [0.30])
+    raw_b = Mirage(MirageConfig(minsup=2, n_partitions=1,
+                                bucket_shapes=False))._survivor_cap(
+                                    C, Cp, [0.33])
+    assert raw_a != raw_b
+    assert m._survivor_cap(C, Cp, [0.30]) == m._survivor_cap(C, Cp, [0.33])
+
+
+def test_bucketed_cap_miss_retry_stays_in_family(monkeypatch):
+    """A forced cap miss under bucketing must take the materialize-only
+    retry, re-bucket the survivor store into the S family (so the next
+    level's shapes stay cached), and still produce exact results."""
+    graphs = paper_toy_db()
+    ref = mine_host(graphs, 2)
+    monkeypatch.setattr(Mirage, "_survivor_cap",
+                        lambda self, C, Cp, ratios: 1)
+    retries = {"n": 0}
+    orig = Mirage._materialize_exact
+
+    def counting(self, *a, **kw):
+        retries["n"] += 1
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(Mirage, "_materialize_exact", counting)
+    cfg = MirageConfig(minsup=2, n_partitions=2, max_embeddings=8,
+                       bucket_shapes=True, bucket_s_floor=4,
+                       bucket_c_floor=8)
+    stores = []
+    orig_run = Mirage._level_single_sync
+
+    def spy(self, *a, **kw):
+        out = orig_run(self, *a, **kw)
+        stores.append(int(out.pol.shape[1]))
+        return out
+
+    monkeypatch.setattr(Mirage, "_level_single_sync", spy)
+    res = Mirage(cfg).fit(graphs)
+    assert retries["n"] > 0, "the cap-miss retry branch must fire"
+    for p in stores[:-1]:       # last level may be the empty fixpoint
+        assert p % 4 == 0 and (p // 4) & (p // 4 - 1) == 0, (
+            f"retried store P={p} escaped the 4·2^i family")
+    assert sum(res.counts()) == 13
+    for code, sup in res.supports.items():
+        assert sup == ref.frequent[code].support, code
+
+
+def test_donation_arena_aliases_without_warning(recwarn):
+    """With bucketing aligning consecutive levels' store shapes and
+    donation engaged (no retry possible), XLA must actually alias the
+    donated parent store — the 'donated buffers were not usable'
+    warning is the tripwire for a broken arena."""
+    import warnings
+    graphs = random_db(16, n_vertices=6, extra_edge_prob=0.3, n_vlabels=2,
+                       n_elabels=2, seed=9)
+    # floors chosen so EVERY level of this DB lands in one bucket
+    # (C <= 128 throughout, level-1 pattern count <= 128, K <= 8):
+    # all level programs then share literally one store shape
+    cfg = MirageConfig(minsup=4, n_partitions=2, max_size=4,
+                       max_embeddings=64, escalate_on_overflow=False,
+                       predict_survivors=False, donate=True,
+                       bucket_shapes=True, bucket_c_floor=128,
+                       bucket_s_floor=128, bucket_k_floor=8)
+    ref = mine_host(graphs, 4, max_size=4)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res = Mirage(cfg).fit(graphs)
+    unusable = [w for w in caught
+                if "donated buffers were not usable" in str(w.message)]
+    assert not unusable, [str(w.message)[:200] for w in unusable]
+    for code, sup in res.supports.items():
+        assert sup == ref.frequent[code].support, code
+
+
 def test_donation_mode_correct():
     """With the escalation valve off and no cap prediction the program
     donates its input buffers — results must be unchanged."""
