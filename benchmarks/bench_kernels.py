@@ -163,6 +163,7 @@ def run():
     yield row("kernels/pallas_interpret_parity", 0.0, "exact")
 
     yield from _bench_bucketing()
+    yield from _bench_recovery()
 
 
 def _bench_bucketing():
@@ -214,3 +215,51 @@ def _bench_bucketing():
                   f"compiles={len(compiled)};levels={n_levels}")
     yield row("kernels/level_bucketing_cold_speedup", 0.0,
               f"speedup=x{per_level[False] / per_level[True]:.2f}")
+
+
+def _bench_recovery():
+    """Recovery overhead (DESIGN.md §10): wall time of a supervised
+    mining run, clean vs with one injected in-kernel fault at level 3
+    (retry from the level-2 checkpoint; zero backoff so the row measures
+    replay + checkpoint-load cost, not sleep).  Warm caches — both runs
+    reuse the already-compiled level programs, isolating the recovery
+    machinery itself."""
+    import shutil
+    import tempfile
+    import time
+
+    from repro.core.graphdb import random_db
+    from repro.core.mining import MirageConfig
+    from repro.core.supervisor import MiningSupervisor, SupervisorConfig
+    from repro.runtime import faults
+
+    graphs = random_db(10, seed=5, n_vertices=9, n_vlabels=2, n_elabels=1)
+
+    def mine(schedule):
+        root = tempfile.mkdtemp(prefix="bench-recovery-")
+        try:
+            if schedule:
+                faults.install(faults.FaultSchedule.parse(schedule))
+            sup = MiningSupervisor(
+                MirageConfig(minsup=5, n_partitions=2, max_size=5,
+                             checkpoint_dir=root),
+                SupervisorConfig(backoff_base=0.0, sleep_fn=lambda s: None))
+            t0 = time.perf_counter()
+            res = sup.mine(graphs)
+            secs = time.perf_counter() - t0
+            return res, sup, secs
+        finally:
+            faults.clear()
+            shutil.rmtree(root, ignore_errors=True)
+
+    mine(None)                                  # warm the jit caches
+    res_c, _, clean = mine(None)
+    res_f, sup_f, faulted = mine("kernel_fault@3")
+    assert len(sup_f.events) == 1, sup_f.events
+    assert sorted(res_f.supports.items()) == sorted(res_c.supports.items())
+    yield row("kernels/recovery_clean", clean,
+              f"levels={len(res_c.stats)}")
+    yield row("kernels/recovery_one_fault", faulted,
+              f"replayed_from_ckpt=1;events={len(sup_f.events)}")
+    yield row("kernels/recovery_overhead", 0.0,
+              f"overhead=x{faulted / max(clean, 1e-9):.2f}")

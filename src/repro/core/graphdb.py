@@ -28,11 +28,18 @@ import numpy as np
 __all__ = [
     "Graph",
     "GraphDB",
+    "GraphValidationError",
+    "validate_db",
     "encode_db",
     "decode_db",
     "random_db",
     "pubchem_like_db",
 ]
+
+
+class GraphValidationError(ValueError):
+    """A malformed input graph database (DESIGN.md §10: garbage is
+    rejected at the door, never mined into silently wrong supports)."""
 
 
 @dataclasses.dataclass
@@ -116,6 +123,56 @@ class GraphDB:
             "elabels": self.elabels,
             "emask": self.emask,
         }
+
+
+def validate_db(graphs: Sequence[Graph]) -> None:
+    """Validate a user-supplied transaction database at the load
+    boundary (``make_partitions`` calls this before any filtering).
+
+    Rejected with a :class:`GraphValidationError` naming the offending
+    graph: empty graphs, negative vertex/edge labels, edge-label arrays
+    not matching the edge count, dangling edge endpoints (out of
+    ``[0, n_v)``), self-loops, and duplicate undirected edges.  Only
+    *user input* is checked — internally derived graphs (e.g. after
+    infrequent-edge filtering, which legitimately empties graphs) never
+    pass through here.
+    """
+    if len(graphs) == 0:
+        raise GraphValidationError("empty database: no graphs to mine")
+    for i, g in enumerate(graphs):
+        if not isinstance(g, Graph):
+            raise GraphValidationError(
+                f"graph {i}: expected a Graph, got {type(g).__name__}")
+        if g.n_vertices == 0:
+            raise GraphValidationError(f"graph {i}: no vertices")
+        if g.elabels.shape[0] != g.n_edges:
+            raise GraphValidationError(
+                f"graph {i}: {g.n_edges} edges but "
+                f"{g.elabels.shape[0]} edge labels")
+        if g.vlabels.min(initial=0) < 0:
+            raise GraphValidationError(
+                f"graph {i}: negative vertex label "
+                f"{int(g.vlabels.min())}")
+        if g.n_edges == 0:
+            continue
+        if g.elabels.min() < 0:
+            raise GraphValidationError(
+                f"graph {i}: negative edge label {int(g.elabels.min())}")
+        lo, hi = g.edges.min(), g.edges.max()
+        if lo < 0 or hi >= g.n_vertices:
+            raise GraphValidationError(
+                f"graph {i}: dangling edge endpoint {int(lo if lo < 0 else hi)} "
+                f"outside [0, {g.n_vertices})")
+        if (g.edges[:, 0] == g.edges[:, 1]).any():
+            u = int(g.edges[g.edges[:, 0] == g.edges[:, 1]][0, 0])
+            raise GraphValidationError(f"graph {i}: self-loop at vertex {u}")
+        # Graph.__post_init__ normalized endpoints to u < v, so exact
+        # row duplicates are exactly duplicate undirected edges
+        uniq = np.unique(g.edges, axis=0)
+        if uniq.shape[0] != g.n_edges:
+            raise GraphValidationError(
+                f"graph {i}: duplicate edges "
+                f"({g.n_edges - uniq.shape[0]} repeated)")
 
 
 def encode_db(

@@ -31,15 +31,20 @@ This module fuses the whole per-level dataflow into ONE jitted program:
 The host receives exactly ONE device→host transfer per level: the packed
 int32 *wire* vector
 
-  [0:Cp]   global support per (padded) candidate
-  [Cp+0]   true survivor count (may exceed the cap S — driver retries)
-  [Cp+1]   overflow (matches dropped by the M cap, survivors only)
-  [Cp+2]   rebalanced flag (0/1)
-  [Cp+3]   imbalance, 16.16 fixed point
-  [Cp+4:]  the (NP,) partition permutation that was applied
+  [0:Cp]      global support per (padded) candidate
+  [Cp+0]      true survivor count (may exceed the cap S — driver retries)
+  [Cp+1]      overflow (matches dropped by the M cap, survivors only)
+  [Cp+2]      rebalanced flag (0/1)
+  [Cp+3]      imbalance, 16.16 fixed point
+  [Cp+4:-1]   the (NP,) partition permutation that was applied
+  [-1]        checksum word over everything before it (DESIGN.md §10)
 
 and derives everything else (frequent verdicts, survivor ids, escalation
-and rebalance bookkeeping) host-side from it.
+and rebalance bookkeeping) host-side from it.  The checksum is computed
+on device and re-computed host-side before any field is decoded: a
+corrupted transfer triggers a bounded re-fetch from the (pristine)
+device buffer, then a ``WireIntegrityError`` — never silently wrong
+supports.
 
 Exceptional paths — the escalation valve (overflow > 0) and a survivor-
 cap miss (n_keep > S) — fall back to the cheap materialize-only program
@@ -75,14 +80,37 @@ from jax.sharding import NamedSharding
 
 from ..kernels.ops import (Backend, device_local_supports,
                            fused_level_supports, is_fused_backend)
-from ..runtime import jax_compat
+from ..runtime import faults, jax_compat
 from .embedding import LevelOL, materialize_one
 from .mapreduce import MiningMesh, reduce_supports
 
 __all__ = ["LevelWire", "LevelOutputs", "run_level", "unpack_wire",
-           "lpt_permutation"]
+           "lpt_permutation", "wire_checksum"]
 
 _IMBAL_FX = 1 << 16
+
+# Fibonacci / murmur-style 32-bit odd mixing constants.  The checksum is
+# a position-salted multiplicative sum: word i contributes
+# (w_i ^ i*PHI32) * MIX, all in wrapping uint32, so both a flipped bit
+# anywhere and two swapped words change the sum.  The final >> 1 makes
+# the value fit int32 exactly, letting it ride the int32 wire itself.
+_CSUM_SALT = 0x9E3779B1
+_CSUM_MIX = 0x85EBCA77
+
+_WIRE_FETCH_ATTEMPTS = 3
+
+
+def wire_checksum(wire):
+    """Checksum word for a packed int32 wire (all words but the last).
+
+    Pure wrapping-uint32 arithmetic so the device (jnp, inside the level
+    program) and the host (np, before decoding) compute bit-identical
+    values."""
+    xp = jnp if isinstance(wire, jax.Array) else np
+    u = wire.astype(xp.uint32)
+    idx = xp.arange(u.shape[0], dtype=xp.uint32)
+    mixed = (u ^ (idx * xp.uint32(_CSUM_SALT))) * xp.uint32(_CSUM_MIX)
+    return (mixed.sum(dtype=xp.uint32) >> xp.uint32(1)).astype(xp.int32)
 
 
 @dataclasses.dataclass
@@ -244,12 +272,13 @@ def _level_program(mmesh: MiningMesh, minsup: int,
         else:
             do_reb = jnp.zeros((), bool)
             perm = jnp.arange(NP, dtype=jnp.int32)
-        wire = jnp.concatenate([
+        body = jnp.concatenate([
             gsup.astype(jnp.int32),
             jnp.stack([n_keep, overflow, do_reb.astype(jnp.int32),
                        (imbal * _IMBAL_FX).astype(jnp.int32)]),
             perm,
         ])
+        wire = jnp.concatenate([body, wire_checksum(body)[None]])
         return wire, ol, mask
 
     donate_argnums = ()
@@ -284,8 +313,29 @@ def permute_stores(mmesh: MiningMesh, perm: np.ndarray, *arrays):
     return _permute_program(mmesh)(jnp.asarray(perm, jnp.int32), *arrays)
 
 
+def _fetch_wire(wire_d, level: Optional[int]) -> np.ndarray:
+    """The ONE device→host transfer of a clean level, integrity-checked.
+
+    ``np.array`` (a copy, so jax's cached host value stays pristine even
+    when the chaos hook corrupts our view) fetches the packed wire; the
+    trailing checksum word is re-computed host-side before any field is
+    decoded.  A mismatch — a flipped bit on the host link — triggers a
+    bounded re-fetch from the device buffer; persistent mismatch raises
+    :class:`~repro.runtime.faults.WireIntegrityError` for the supervisor
+    rather than ever decoding corrupt supports."""
+    for _ in range(_WIRE_FETCH_ATTEMPTS):
+        host = faults.corrupt_wire(np.array(wire_d), level)
+        if int(wire_checksum(host[:-1])) == int(host[-1]):
+            return host[:-1]
+    raise faults.WireIntegrityError(
+        f"level wire failed checksum {_WIRE_FETCH_ATTEMPTS}x"
+        + (f" at level {level}" if level is not None else ""))
+
+
 def unpack_wire(wire: np.ndarray, C: int, Cp: int, n_partitions: int
                 ) -> LevelWire:
+    """Decode the (checksum-stripped) wire body by explicit offsets —
+    robust to any trailing padding."""
     return LevelWire(
         gsup=wire[:C],
         n_keep=int(wire[Cp]),
@@ -316,6 +366,7 @@ def run_level(
     donate: bool,
     child_width: Optional[int] = None,
     sched_floor: Optional[int] = None,
+    level: Optional[int] = None,
 ) -> LevelOutputs:
     """Dispatch one level program and perform the single host sync.
 
@@ -330,6 +381,10 @@ def run_level(
     """
     Cp = meta_p.shape[0]
     n_partitions = pol.shape[0]
+    # chaos hook: a scheduled in-kernel fault fires here, standing in for
+    # an XLA/Mosaic dispatch abort (the supervisor's degradation ladder
+    # answers it by swapping backends)
+    faults.maybe_raise("kernel", level)
     fn = _level_program(mmesh, minsup, backend, reduce,
                         max_embeddings, survivor_cap, rebalance,
                         threshold, donate, child_width)
@@ -357,6 +412,6 @@ def run_level(
     else:
         out = fn(c_real, jnp.asarray(meta_p), pol, pmask, src, dst, emask)
     wire_d, new_pol, new_pmask = out
-    # THE one device->host transfer of the level
-    wire = unpack_wire(np.asarray(wire_d), C_real, Cp, n_partitions)
+    # THE one device->host transfer of the level, checksum-verified
+    wire = unpack_wire(_fetch_wire(wire_d, level), C_real, Cp, n_partitions)
     return LevelOutputs(wire, new_pol, new_pmask, src, dst, emask)

@@ -49,6 +49,7 @@ import numpy as np
 
 from ..kernels.ops import Backend, default_backend
 from ..runtime import checkpoint as ckpt
+from ..runtime import faults
 from .buckets import BucketSpec, bucket_size, round_up_multiple
 from .candgen import Candidate, EdgeAlphabet, generate_candidates
 from .dfscode import Code, array_to_code, code_to_array
@@ -58,9 +59,56 @@ from .level_step import permute_stores, run_level
 from .mapreduce import MiningMesh, map_materialize, map_reduce_supports
 from .partition import make_partitions
 
-__all__ = ["MirageConfig", "LevelStats", "DistMiningResult", "Mirage"]
+__all__ = ["MirageConfig", "LevelStats", "DistMiningResult", "Mirage",
+           "DonationPolicy", "DonationRetryRebuild"]
 
 PIPELINES = ("single_sync", "legacy")
+
+
+class DonationRetryRebuild(RuntimeError):
+    """An armed-donation level needed its retry path, but donation
+    already consumed the parent buffers — the driver must rebuild them
+    from the latest checkpoint and replay the level."""
+
+    def __init__(self, level: int):
+        self.level = level
+        super().__init__(
+            f"level {level}: donated arena hit a retry — rebuilding "
+            f"parents from checkpoint")
+
+
+class DonationPolicy:
+    """Donation re-arming state machine (DESIGN.md §10, closing the
+    PR-3 ROADMAP note).
+
+    A level that might retry (survivor-cap miss, escalation valve) must
+    normally keep its parent buffers alive — donation off, arena lost.
+    This policy re-arms donation after ``k`` consecutive clean levels
+    *provided* a checkpoint exists to rebuild the parents from: the
+    retry stays possible, it just changes shape — a gambled retry costs
+    one checkpoint load + level replay instead of a kept parent copy
+    every level.  A retry or a rebuild resets the streak."""
+
+    def __init__(self, k: int, can_rebuild: bool = False):
+        self.k = k
+        self.can_rebuild = can_rebuild
+        self.clean_streak = 0
+        self.rebuilds = 0
+
+    @property
+    def armed(self) -> bool:
+        """May the driver donate even though this level could retry?"""
+        return (self.k > 0 and self.can_rebuild
+                and self.clean_streak >= self.k)
+
+    def record(self, retried: bool) -> None:
+        """Account one completed level."""
+        self.clean_streak = 0 if retried else self.clean_streak + 1
+
+    def record_rebuild(self) -> None:
+        """The gamble lost: parents were rebuilt from checkpoint."""
+        self.rebuilds += 1
+        self.clean_streak = 0
 
 
 @dataclasses.dataclass
@@ -80,6 +128,10 @@ class MirageConfig:
     rebalance: bool = True
     pipeline: str = "single_sync"       # "single_sync" | "legacy"
     donate: bool = True                 # donate OL buffers when retry-free
+    # re-arm donation after this many consecutive clean levels even when
+    # a retry is possible, rebuilding parents from checkpoint if the
+    # gamble loses (0 disables; needs checkpoint_dir to ever engage)
+    donation_rearm_levels: int = 3
     predict_survivors: bool = True      # shrink the survivor cap from history
     survivor_slack: float = 2.0         # cap = slack * predicted survivors
     # ---- shape bucketing (single_sync pipeline; DESIGN.md §9) --------
@@ -150,6 +202,7 @@ class _LevelOutcome:
     perm: Optional[np.ndarray]  # applied partition permutation (or None)
     map_seconds: float
     escalations: int
+    retried: bool = False       # level took a materialize-only retry
 
 
 class Mirage:
@@ -192,7 +245,12 @@ class Mirage:
         # re-derive one from the (possibly different) current mesh
         resume_state = resume_meta = None
         if resume and cfg.checkpoint_dir and ckpt.latest_step(cfg.checkpoint_dir):
-            resume_state, resume_meta = ckpt.load_step(cfg.checkpoint_dir)
+            try:
+                resume_state, resume_meta = ckpt.load_step(cfg.checkpoint_dir)
+            except FileNotFoundError:
+                # every on-disk step failed integrity verification and
+                # was reaped — a fresh start is the only sound option
+                resume_state = resume_meta = None
 
         # ---- phase 1: partition (host) --------------------------------
         if resume_state is not None:
@@ -260,15 +318,10 @@ class Mirage:
             start_level = int(resume_meta["step"])
             M = int(state["max_embeddings"])
             total_overflow = int(state["total_overflow"])
-            if bk is not None:
-                # checkpoints store the CANONICAL (unpadded) survivor
-                # store; re-bucket it into the CURRENT config's family —
-                # the writer may have used different floors (or none)
-                pol, pmask = _pad_store(
-                    pol, pmask,
-                    p_to=bucket_size(pol.shape[1], bk.s_floor),
-                    m_to=bk.embeddings(pol.shape[3], cfg.max_embeddings),
-                    k_to=bk.vertex_slots(pol.shape[-1]))
+            # checkpoints store the CANONICAL (unpadded) survivor store;
+            # re-bucket it into the CURRENT config's family — the writer
+            # may have used different floors (or none)
+            pol, pmask = self._repad_saved(pol, pmask)
 
         pol, pmask, src_d, dst_d, emask_d = self._device_put(
             pol, pmask, src, dst, emask)
@@ -280,6 +333,11 @@ class Mirage:
         # survivor-ratio history drives the next level's compaction cap
         # (single-sync pipeline); empty = no history yet
         ratios: list[float] = []
+        # donation re-arming: a resumed run already has a rebuildable
+        # checkpoint; a fresh run earns one at its first _save
+        policy = DonationPolicy(
+            cfg.donation_rearm_levels,
+            can_rebuild=bool(cfg.checkpoint_dir) and resume_state is not None)
 
         # ---- phase 3: iterative mining ---------------------------------
         k = start_level
@@ -288,6 +346,8 @@ class Mirage:
             cands = generate_candidates(levels[-1], alphabet)
             if not cands:
                 break
+            # chaos hook: a scheduled worker death at this level
+            faults.maybe_raise("level_start", k + 1)
             meta = candidate_meta(cands, eol0)
             C = meta.shape[0]
             Cp = (bk.candidates(C, self.mesh.n_workers) if bk is not None
@@ -305,9 +365,20 @@ class Mirage:
                 # child still fits, so the arena shape repeats
                 child_width = (bk.vertex_slots(k + 2, int(pol.shape[-1]))
                                if bk is not None else None)
-                out = self._level_single_sync(
-                    meta_p, meta, C, pol, pmask, src_d, dst_d, emask_d,
-                    minsup, M, ratios, child_width)
+                try:
+                    out = self._level_single_sync(
+                        meta_p, meta, C, pol, pmask, src_d, dst_d, emask_d,
+                        minsup, M, ratios, child_width,
+                        level=k + 1, policy=policy)
+                except DonationRetryRebuild:
+                    # the armed-donation gamble lost: the arena consumed
+                    # the parents, so restore them from the latest intact
+                    # checkpoint (canonical store re-padded + cumulative
+                    # rebalance permutation re-applied) and replay
+                    pol, pmask = self._rebuild_parents(order)
+                    policy.record_rebuild()
+                    continue
+                policy.record(out.retried)
             M = out.max_embeddings
             total_overflow += out.overflow
 
@@ -335,10 +406,43 @@ class Mirage:
             if cfg.checkpoint_dir:
                 self._save(cfg.checkpoint_dir, k + 1, levels, supports,
                            pol, pmask, M, total_overflow, order)
+                policy.can_rebuild = True
             k += 1
 
         return DistMiningResult(levels, supports, stats, alphabet, minsup,
                                 total_overflow)
+
+    # the paper's verb; the supervisor wraps this entrypoint
+    mine = fit
+
+    # ------------------------------------------------------------------
+    def _repad_saved(self, pol, pmask):
+        """Re-bucket a checkpoint's canonical (padding-stripped) survivor
+        store into the CURRENT config's shape family — shared by resume
+        and mid-run parent rebuild.  No-op without bucketing."""
+        bk = self._buckets()
+        if bk is None:
+            return pol, pmask
+        return _pad_store(
+            pol, pmask,
+            p_to=bucket_size(pol.shape[1], bk.s_floor),
+            m_to=bk.embeddings(pol.shape[3], self.cfg.max_embeddings),
+            k_to=bk.vertex_slots(pol.shape[-1]))
+
+    def _rebuild_parents(self, order: np.ndarray):
+        """Restore the parent OL store of the level being replayed from
+        the latest intact checkpoint: canonical store → current bucket
+        family → the live partition order (checkpoints are canonical;
+        ``order`` is the cumulative rebalance permutation, unchanged
+        since that save because rebalances apply only to levels that
+        completed)."""
+        state, _ = ckpt.load_step(self.cfg.checkpoint_dir)
+        pol, pmask = self._repad_saved(state["pol"], state["pmask"])
+        pol, pmask = pol[order], pmask[order]
+        sharding = jax.sharding.NamedSharding(
+            self.mesh.mesh, self.mesh.spec_parts())
+        return (jax.device_put(jnp.asarray(pol), sharding),
+                jax.device_put(jnp.asarray(pmask), sharding))
 
     # ------------------------------------------------------------------
     def _buckets(self) -> Optional[BucketSpec]:
@@ -386,7 +490,9 @@ class Mirage:
 
     def _level_single_sync(self, meta_p, meta, C, pol, pmask, src, dst,
                            emask, minsup, M, ratios,
-                           child_width: Optional[int] = None
+                           child_width: Optional[int] = None, *,
+                           level: Optional[int] = None,
+                           policy: Optional[DonationPolicy] = None
                            ) -> _LevelOutcome:
         """One level through the device-resident program: a single
         dispatch and a single device→host sync on the wire vector.
@@ -395,25 +501,35 @@ class Mirage:
         back to the cheap materialize-only program from the preserved
         inputs: a survivor-cap miss re-materializes the full survivor
         set, and the escalation valve re-materializes at a doubled M.
-        Donation is engaged only when no such retry is possible."""
+        Donation is engaged when no such retry is possible — or when the
+        re-arming policy is armed (enough clean levels + a rebuildable
+        checkpoint); an armed level that then DOES need its retry raises
+        :class:`DonationRetryRebuild` instead, because donation already
+        consumed the parents."""
         cfg = self.cfg
         bk = self._buckets()
         Cp = meta_p.shape[0]
         backend = cfg.backend or default_backend()
         S = self._survivor_cap(C, Cp, ratios)
+        # chaos hook: a cap-miss storm forces a pathological cap, driving
+        # every hit level through the materialize-only retry path
+        S = faults.override_cap(S, level)
         # a cap miss needs n_keep > S, and n_keep <= C always — S >= C
         # rules the retry out even when S sits below the padded Cp
         may_retry = (S < C or (cfg.escalate_on_overflow
                                and M < cfg.max_embeddings_limit))
+        donated = cfg.donate and (not may_retry
+                                  or (policy is not None and policy.armed))
         t_map = time.perf_counter()
         out = run_level(
             self.mesh, meta_p, C, pol, pmask, src, dst, emask,
             minsup=minsup, backend=backend, reduce=cfg.reduce,
             max_embeddings=M, survivor_cap=S,
             rebalance=cfg.rebalance, threshold=cfg.rebalance_threshold,
-            donate=cfg.donate and not may_retry,
+            donate=donated,
             child_width=child_width,
-            sched_floor=bk.c_floor if bk is not None else None)
+            sched_floor=bk.c_floor if bk is not None else None,
+            level=level)
         w = out.wire
         map_secs = time.perf_counter() - t_map
 
@@ -432,7 +548,13 @@ class Mirage:
 
         escalatable = (cfg.escalate_on_overflow
                        and M < cfg.max_embeddings_limit)
-        if n > 0 and (n > S or (overflow > 0 and escalatable)):
+        retried = bool(n > 0 and (n > S or (overflow > 0 and escalatable)))
+        if retried:
+            if donated:
+                # armed-donation gamble lost: the parents are gone (the
+                # arena aliased them) — the driver rebuilds from
+                # checkpoint and replays this level
+                raise DonationRetryRebuild(level if level is not None else -1)
             if overflow > 0 and escalatable:
                 # the program just proved M too small (for a cap miss,
                 # on a subset of survivors — still a proof): skip the
@@ -460,7 +582,8 @@ class Mirage:
             overflow=overflow, max_embeddings=M,
             rebalanced=w.rebalanced and n > 0, imbalance=w.imbalance,
             perm=w.perm if (w.rebalanced and n > 0) else None,
-            map_seconds=map_secs, escalations=escalations)
+            map_seconds=map_secs, escalations=escalations,
+            retried=retried)
 
     # ------------------------------------------------------------------
     def _level_legacy(self, meta_p, meta, C, pol, pmask, src, dst, emask,

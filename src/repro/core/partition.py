@@ -17,7 +17,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .graphdb import Graph
+from .graphdb import Graph, validate_db
 from .host_miner import frequent_edges
 from .candgen import EdgeAlphabet
 
@@ -64,6 +64,11 @@ def make_partitions(
     mining short-circuits to an empty result).
     """
     n = len(graphs)
+    if n:
+        # the load boundary: user input is validated HERE, before any
+        # filtering (drop_edges legitimately empties graphs later).
+        # An empty database stays exempt per the contract above.
+        validate_db(graphs)
     if n_partitions < 1:
         raise ValueError(f"n_partitions={n_partitions} must be >= 1")
     if n and n_partitions > n:

@@ -1,0 +1,231 @@
+"""Supervised recovery driver around :meth:`Mirage.mine` (DESIGN.md §10).
+
+MIRAGE inherits MapReduce's contract: iterations are restartable because
+level state hits durable storage between them, so the *job* survives
+what kills a *task*.  This module is that job-level supervisor for the
+JAX runtime.  It classifies every failure the mining loop can surface —
+injected or real — and applies one of four recoveries:
+
+  worker_loss  → elastically shrink the worker pool (largest divisor of
+                 n_partitions below the current W, floored at
+                 ``min_workers``) and resume from the latest intact
+                 checkpoint; PR 2's canonical unsharded checkpoints make
+                 the re-layout free.  When no smaller mesh exists the
+                 level is simply replayed on the same mesh.
+  kernel       → retry; after ``degrade_after`` kernel faults descend
+                 the degradation ladder ``fused → pallas → legacy``
+                 (rung 1 swaps the fused single-launch kernel for the
+                 two-launch pallas/interpret backend; rung 2 abandons
+                 the single-sync program for the legacy host-driven
+                 pipeline, which dispatches no fused kernel at all).
+  transient    → (wire checksum failures and other flaky-link signals)
+                 retry with exponential backoff, same configuration.
+  state        → (checkpoint integrity) retry: the store has already
+                 reaped the corrupt step, so the next attempt resumes
+                 from the newest *intact* one — or restarts clean.
+
+Anything unclassified is **fatal** and re-raised untouched: a
+supervisor that swallows real bugs would poison every chaos guarantee.
+
+Every decision is recorded as a structured :class:`FaultEvent`
+(``events``; JSON-dumped to ``fault_log_path``), giving tests and the
+CI chaos job an auditable recovery trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Optional, Sequence
+
+from ..runtime import faults, jax_compat
+from .graphdb import Graph
+from .mapreduce import MiningMesh
+from .mining import DistMiningResult, Mirage, MirageConfig
+
+__all__ = ["SupervisorConfig", "FaultEvent", "MiningSupervisor",
+           "classify", "elastic_shrink"]
+
+#: degradation-ladder rungs, most- to least-accelerated.  Each entry is
+#: the config override applied at that rung; rung 0 is "as configured".
+LADDER = ("as-configured", "pallas", "legacy")
+
+
+def classify(exc: BaseException) -> Optional[str]:
+    """Map an exception to a recovery class, or None for fatal."""
+    if isinstance(exc, faults.WorkerLost):
+        return "worker_loss"
+    if isinstance(exc, faults.KernelFault):
+        return "kernel"
+    if isinstance(exc, faults.WireIntegrityError):
+        return "transient"
+    if isinstance(exc, faults.CheckpointIntegrityError):
+        return "state"
+    return None
+
+
+def elastic_shrink(workers: int, n_partitions: int,
+                   min_workers: int = 1) -> Optional[int]:
+    """Largest viable worker count below ``workers``: the partition
+    count must stay divisible (blocked dim-0 sharding), so this is the
+    largest divisor of ``n_partitions`` in [min_workers, workers)."""
+    for w in range(workers - 1, min_workers - 1, -1):
+        if n_partitions % w == 0:
+            return w
+    return None
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    max_retries: int = 5                # total recovery attempts
+    backoff_base: float = 0.05          # seconds before attempt 2
+    backoff_factor: float = 2.0
+    backoff_max: float = 2.0
+    degrade_after: int = 2              # kernel faults per ladder rung
+    min_workers: int = 1                # elastic-shrink floor
+    sleep_fn: Callable[[float], None] = time.sleep
+    fault_log_path: Optional[str] = None
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One supervisor decision, structured for the fault log."""
+
+    attempt: int
+    kind: str                           # recovery class (or "fatal")
+    error: str                          # repr of the triggering exception
+    level: Optional[int]                # mining level, when known
+    action: str                         # retry | shrink | degrade | give_up
+    detail: str
+    backoff: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class MiningSupervisor:
+    """Run :meth:`Mirage.mine` to completion through faults.
+
+    ``mesh`` seeds the worker pool (default single-device);
+    ``mesh_factory(n_workers)`` builds the shrunken mesh on worker loss
+    — the default takes the first n of ``jax.devices()``.  Recovery is
+    only cheap with ``config.checkpoint_dir`` set (resume replays at
+    most one level); without it every retry restarts from scratch,
+    which is still correct, just slower.
+    """
+
+    def __init__(self, config: MirageConfig,
+                 sup: Optional[SupervisorConfig] = None,
+                 mesh: Optional[MiningMesh] = None,
+                 mesh_factory: Optional[Callable[[int], MiningMesh]] = None):
+        self.config = config
+        self.sup = sup or SupervisorConfig()
+        self.mesh = mesh or MiningMesh.single_device()
+        self.mesh_factory = mesh_factory or _default_mesh_factory
+        self.events: list[FaultEvent] = []
+        self.rung = 0
+
+    # ------------------------------------------------------------------
+    def mine(self, graphs: Sequence[Graph], *,
+             resume: bool = False) -> DistMiningResult:
+        sup = self.sup
+        cfg = self.config
+        mesh = self.mesh
+        attempt = 0
+        kernel_faults = 0
+        while True:
+            try:
+                result = Mirage(cfg, mesh).mine(
+                    graphs, resume=resume or attempt > 0)
+                self._flush_log()
+                return result
+            except Exception as exc:                      # noqa: BLE001
+                kind = classify(exc)
+                if kind is None:
+                    self._record(attempt, "fatal", exc, "give_up",
+                                 "unclassified failure — re-raised", 0.0)
+                    self._flush_log()
+                    raise
+                attempt += 1
+                if attempt > sup.max_retries:
+                    self._record(attempt, kind, exc, "give_up",
+                                 f"retry budget ({sup.max_retries}) "
+                                 f"exhausted", 0.0)
+                    self._flush_log()
+                    raise
+                backoff = min(
+                    sup.backoff_base * sup.backoff_factor ** (attempt - 1),
+                    sup.backoff_max)
+                action, detail = "retry", "same configuration"
+
+                if kind == "worker_loss":
+                    w = elastic_shrink(mesh.n_workers, cfg.n_partitions,
+                                       sup.min_workers)
+                    if w is not None:
+                        mesh = self.mesh_factory(w)
+                        action = "shrink"
+                        detail = (f"elastic shrink to {w} worker(s), "
+                                  f"resume from checkpoint")
+                    else:
+                        detail = (f"no viable mesh below "
+                                  f"{mesh.n_workers} worker(s) — replay "
+                                  f"on the same mesh")
+                elif kind == "kernel":
+                    kernel_faults += 1
+                    if (kernel_faults % sup.degrade_after == 0
+                            and self.rung < len(LADDER) - 1):
+                        self.rung += 1
+                        cfg = _degrade(cfg, self.rung)
+                        action = "degrade"
+                        detail = (f"descend ladder to rung {self.rung} "
+                                  f"({LADDER[self.rung]})")
+                elif kind == "state":
+                    detail = ("corrupt checkpoint reaped — resume from "
+                              "newest intact step (or restart clean)")
+
+                self._record(attempt, kind, exc, action, detail, backoff)
+                if backoff > 0:
+                    sup.sleep_fn(backoff)
+
+    # ------------------------------------------------------------------
+    def _record(self, attempt: int, kind: str, exc: BaseException,
+                action: str, detail: str, backoff: float) -> None:
+        self.events.append(FaultEvent(
+            attempt=attempt, kind=kind, error=repr(exc),
+            level=getattr(exc, "level", None),
+            action=action, detail=detail, backoff=backoff))
+
+    def _flush_log(self) -> None:
+        if self.sup.fault_log_path:
+            with open(self.sup.fault_log_path, "w") as f:
+                json.dump({"rung": self.rung,
+                           "events": [e.as_dict() for e in self.events]},
+                          f, indent=2)
+
+
+def _degrade(cfg: MirageConfig, rung: int) -> MirageConfig:
+    """Config override for a degradation-ladder rung.
+
+    Rung 1 keeps the single-sync pipeline but drops the fused
+    single-launch kernel for the two-launch backend ("pallas" on TPU,
+    its "interpret" twin elsewhere).  Rung 2 falls all the way back to
+    the legacy host-driven pipeline on the "ref" backend — the
+    differential oracle, which dispatches no custom kernel at all.
+    """
+    import jax
+
+    if rung <= 0:
+        return cfg
+    if rung == 1:
+        on_tpu = jax.default_backend() == "tpu"
+        return dataclasses.replace(
+            cfg, backend="pallas" if on_tpu else "interpret")
+    return dataclasses.replace(cfg, pipeline="legacy", backend="ref")
+
+
+def _default_mesh_factory(n_workers: int) -> MiningMesh:
+    import jax
+
+    devices = jax.devices()[:n_workers]
+    return MiningMesh(jax_compat.make_mesh(
+        (n_workers,), ("w",), devices=devices))

@@ -42,10 +42,22 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write result JSON here")
+    ap.add_argument("--fault-schedule", default=None, metavar="SPEC",
+                    help="chaos mode: inject a deterministic fault "
+                         "schedule, e.g. 'worker_loss@2;wire_bitflip@3'"
+                         " (see repro.runtime.faults); mining runs "
+                         "under the recovery supervisor")
+    ap.add_argument("--max-retries", type=int, default=5,
+                    help="supervisor recovery-attempt budget")
+    ap.add_argument("--fault-log", default=None,
+                    help="write the structured fault-event log (JSON) "
+                         "here; implies supervised mining")
     args = ap.parse_args()
 
     from repro.core.graphdb import paper_toy_db, pubchem_like_db, random_db
     from repro.core.mining import Mirage, MirageConfig
+    from repro.core.supervisor import MiningSupervisor, SupervisorConfig
+    from repro.runtime import faults
 
     if args.dataset == "paper-toy":
         graphs = paper_toy_db()
@@ -68,10 +80,27 @@ def main() -> None:
         pipeline=args.pipeline, checkpoint_dir=args.ckpt_dir,
         bucket_shapes=not args.no_bucket, **bucket_kw)
 
+    supervised = args.fault_schedule or args.fault_log
+    if args.fault_schedule:
+        schedule = faults.FaultSchedule.parse(args.fault_schedule)
+        faults.install(schedule)
+        print(f"[mine] chaos schedule: {schedule.describe()}")
+
     t0 = time.perf_counter()
-    res = Mirage(cfg).fit(graphs, resume=args.resume)
+    if supervised:
+        sup = MiningSupervisor(
+            cfg, SupervisorConfig(max_retries=args.max_retries,
+                                  fault_log_path=args.fault_log))
+        res = sup.mine(graphs, resume=args.resume)
+    else:
+        res = Mirage(cfg).fit(graphs, resume=args.resume)
     dt = time.perf_counter() - t0
 
+    if supervised and sup.events:
+        print(f"[mine] recovered from {len(sup.events)} fault(s):")
+        for ev in sup.events:
+            print(f"  attempt {ev.attempt}: {ev.kind} at level "
+                  f"{ev.level} -> {ev.action} ({ev.detail})")
     print(f"[mine] |G|={len(graphs)} minsup={res.minsup} "
           f"partitions={args.partitions} scheme={args.scheme} "
           f"reduce={args.reduce}")

@@ -1,0 +1,312 @@
+"""Chaos differential suite (DESIGN.md §10, ISSUE 6 acceptance):
+under every scheduled fault — worker loss at each level, corrupted
+latest checkpoint, wire bit-flips, cap-miss storms, in-kernel faults,
+and random mixed schedules — mining must COMPLETE and return a frequent
+set bit-identical to the fault-free host oracle, with a single worker
+loss replaying at most one level from checkpoint.
+
+Faults are injected into the production code paths (driver loop, level
+program dispatch, wire fetch, checkpoint save); nothing is mocked."""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax._src.array as _jarr
+import numpy as np
+import pytest
+
+from repro.core.graphdb import random_db
+from repro.core.host_miner import mine_host
+from repro.core.mining import Mirage, MirageConfig
+from repro.core.supervisor import MiningSupervisor, SupervisorConfig
+from repro.runtime import checkpoint as ckpt
+from repro.runtime import faults
+
+# Deterministic 4-level DB with multiple survivors at every level
+# (levels: 3, 5, 10, 5 frequent patterns) — deep enough to place faults
+# at levels 2..4, wide enough that cap storms force real retries.
+MINSUP, MAX_SIZE, NPARTS = 5, 5, 2
+DB = random_db(10, seed=5, n_vertices=9, n_vlabels=2, n_elabels=1)
+REF = mine_host(DB, MINSUP, max_size=MAX_SIZE)
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.clear()
+    faults.reset_log()
+    yield
+    faults.clear()
+    faults.reset_log()
+
+
+def _cfg(**kw):
+    kw.setdefault("max_size", MAX_SIZE)
+    return MirageConfig(minsup=MINSUP, n_partitions=NPARTS, **kw)
+
+
+def assert_parity(res):
+    """The chaos contract: bit-identical to the fault-free host oracle."""
+    assert [set(l) for l in res.levels] == [set(l) for l in REF.levels]
+    assert len(res.supports) == len(REF.frequent)
+    for code, sup in res.supports.items():
+        assert sup == REF.frequent[code].support
+
+
+def _supervised(schedule_text, *, ckpt_dir=None, max_retries=8,
+                degrade_after=2, **cfg_kw):
+    faults.install(faults.FaultSchedule.parse(schedule_text))
+    sup = MiningSupervisor(
+        _cfg(checkpoint_dir=ckpt_dir, **cfg_kw),
+        SupervisorConfig(max_retries=max_retries,
+                         degrade_after=degrade_after,
+                         sleep_fn=lambda s: None))
+    return sup.mine(DB), sup
+
+
+# ---------------------------------------------------------------------------
+# worker loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("level", [2, 3, 4])
+def test_worker_loss_at_each_level_replays_at_most_one_level(
+        tmp_path, level):
+    res, sup = _supervised(f"worker_loss@{level}",
+                           ckpt_dir=str(tmp_path / "ck"))
+    assert_parity(res)
+    assert [e.kind for e in sup.events] == ["worker_loss"]
+    assert sup.events[0].level == level
+    # the successful attempt resumed from the level-(L-1) checkpoint:
+    # its first mined level IS the faulted one (levels < L never replay)
+    if level > 2:                       # level 2 has no checkpoint yet
+        assert res.stats[0].level == level
+
+
+def test_worker_loss_without_checkpoints_restarts_clean():
+    res, sup = _supervised("worker_loss@3")
+    assert_parity(res)
+    assert [e.kind for e in sup.events] == ["worker_loss"]
+
+
+# ---------------------------------------------------------------------------
+# wire integrity
+# ---------------------------------------------------------------------------
+
+def test_wire_bitflip_recovers_via_refetch_in_run():
+    """A single flipped bit on the device→host link is caught by the
+    checksum and healed by ONE re-fetch — no supervisor involved, and
+    clean levels still cost exactly one transfer."""
+    faults.install(faults.FaultSchedule.parse("wire_bitflip@3:bit=19"))
+    counts = {"n": 0}
+    orig = _jarr.ArrayImpl._value
+
+    def counting(self):
+        counts["n"] += 1
+        return orig.fget(self)
+
+    _jarr.ArrayImpl._value = property(counting)
+    try:
+        res = Mirage(_cfg()).fit(DB)
+    finally:
+        _jarr.ArrayImpl._value = orig
+    assert_parity(res)
+    assert [e["kind"] for e in faults.injection_log()] == ["wire_bitflip"]
+    # one extra fetch for the corrupted level, one for every clean level
+    assert counts["n"] == len(res.stats) + 1
+
+
+def test_wire_bitflip_storm_escalates_to_supervisor():
+    """Corruption on every fetch attempt exhausts the re-fetch budget,
+    surfaces as a transient fault, and the supervisor's retry wins."""
+    res, sup = _supervised("wire_bitflip@3*3")
+    assert_parity(res)
+    assert [e.kind for e in sup.events] == ["transient"]
+    assert len(faults.injection_log()) == 3
+
+
+# ---------------------------------------------------------------------------
+# survivor-cap storm
+# ---------------------------------------------------------------------------
+
+def test_cap_miss_storm_stays_exact_in_run():
+    """A forced cap of 1 at every mid level drives each through the
+    materialize-only retry path — supports must not move."""
+    faults.install(faults.FaultSchedule.parse(
+        "cap_storm@2;cap_storm@3;cap_storm@4"))
+    res = Mirage(_cfg()).fit(DB)
+    assert_parity(res)
+    fired = [e["kind"] for e in faults.injection_log()]
+    assert fired == ["cap_storm"] * 3
+
+
+# ---------------------------------------------------------------------------
+# kernel faults → degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_kernel_fault_descends_degradation_ladder(tmp_path):
+    """Repeated kernel faults walk fused → pallas/interpret → legacy;
+    the legacy pipeline dispatches no level program at all, so it is
+    immune to the remaining scheduled faults and completes."""
+    res, sup = _supervised("kernel_fault@2*6",
+                           ckpt_dir=str(tmp_path / "ck"))
+    assert_parity(res)
+    assert sup.rung == 2
+    assert [e.action for e in sup.events] == [
+        "retry", "degrade", "retry", "degrade"]
+    assert all(e.kind == "kernel" for e in sup.events)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint corruption
+# ---------------------------------------------------------------------------
+
+def test_corrupted_latest_checkpoint_falls_back_on_resume(tmp_path):
+    root = str(tmp_path / "ck")
+    faults.install(faults.FaultSchedule.parse(
+        "ckpt_corrupt@3:mode=truncate"))
+    Mirage(_cfg(max_size=3, checkpoint_dir=root)).fit(DB)
+    faults.clear()
+    assert ckpt.all_steps(root) == [2, 3]          # 3 is silently rotten
+    res = Mirage(_cfg(checkpoint_dir=root)).fit(DB, resume=True)
+    assert_parity(res)
+    # the resume skipped + reaped step 3, replayed from the intact step
+    # 2 checkpoint, then re-saved levels 3 and 4
+    assert res.stats[0].level == 3
+    assert ckpt.all_steps(root)[-1] == 4
+
+
+def test_all_checkpoints_corrupt_restarts_clean(tmp_path):
+    root = str(tmp_path / "ck")
+    Mirage(_cfg(max_size=3, checkpoint_dir=root)).fit(DB)
+    for step in ckpt.all_steps(root):
+        faults.damage_checkpoint(
+            os.path.join(root, f"step_{step:010d}"), "flip")
+    res = Mirage(_cfg(checkpoint_dir=root)).fit(DB, resume=True)
+    assert_parity(res)
+    assert res.stats[0].level == 2                 # full fresh mine
+
+
+# ---------------------------------------------------------------------------
+# donation re-arming
+# ---------------------------------------------------------------------------
+
+def test_donation_rearm_rebuilds_parents_and_stays_exact(
+        tmp_path, monkeypatch):
+    """With re-arming at k=1, level 3 runs donated despite being
+    retryable; the scheduled cap storm forces the retry, the parents are
+    gone, and the driver must rebuild them from the level-2 checkpoint
+    and replay — ending bit-identical anyway."""
+    rebuilds = {"n": 0}
+    orig = Mirage._rebuild_parents
+
+    def spying(self, order):
+        rebuilds["n"] += 1
+        return orig(self, order)
+
+    monkeypatch.setattr(Mirage, "_rebuild_parents", spying)
+    faults.install(faults.FaultSchedule.parse("cap_storm@3"))
+    res = Mirage(_cfg(checkpoint_dir=str(tmp_path / "ck"),
+                      donation_rearm_levels=1)).fit(DB)
+    assert_parity(res)
+    assert rebuilds["n"] == 1
+    assert [e["kind"] for e in faults.injection_log()] == ["cap_storm"]
+
+
+def test_donation_rearm_disabled_without_checkpoints():
+    """No checkpoint_dir → the policy can never arm; a cap storm takes
+    the ordinary in-level retry (parents were kept alive)."""
+    faults.install(faults.FaultSchedule.parse("cap_storm@3"))
+    res = Mirage(_cfg(donation_rearm_levels=1)).fit(DB)
+    assert_parity(res)
+
+
+# ---------------------------------------------------------------------------
+# random mixed schedules (fixed-seed CI subset + hypothesis sweep)
+# ---------------------------------------------------------------------------
+
+def _mine_under_random_schedule(seed, ckpt_root):
+    schedule = faults.FaultSchedule.random(seed, max_level=4, n_faults=2)
+    with faults.active(schedule):
+        sup = MiningSupervisor(
+            _cfg(checkpoint_dir=ckpt_root),
+            SupervisorConfig(max_retries=10, degrade_after=2,
+                             sleep_fn=lambda s: None))
+        res = sup.mine(DB)
+    assert_parity(res)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_schedule_fixed_seeds(tmp_path, seed):
+    _mine_under_random_schedule(seed, str(tmp_path / "ck"))
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(seed=st.integers(min_value=0, max_value=2**16))
+    def test_random_schedule_property(seed):
+        with tempfile.TemporaryDirectory() as td:
+            _mine_under_random_schedule(seed, os.path.join(td, "ck"))
+
+
+# ---------------------------------------------------------------------------
+# multi-worker elastic shrink (subprocess: forces 2 CPU devices)
+# ---------------------------------------------------------------------------
+
+SHRINK_SNIPPET = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax
+    from repro.core.graphdb import random_db
+    from repro.core.host_miner import mine_host
+    from repro.core.mapreduce import MiningMesh
+    from repro.core.mining import MirageConfig
+    from repro.core.supervisor import MiningSupervisor, SupervisorConfig
+    from repro.runtime import faults, jax_compat
+
+    ck = sys.argv[1]
+    graphs = random_db(10, seed=5, n_vertices=9, n_vlabels=2, n_elabels=1)
+    ref = mine_host(graphs, 5, max_size=5)
+
+    faults.install(faults.FaultSchedule.parse("worker_loss@3"))
+    mesh2 = MiningMesh(jax_compat.make_mesh((2,), ("w",)))
+    sup = MiningSupervisor(
+        MirageConfig(minsup=5, n_partitions=4, max_size=5,
+                     checkpoint_dir=ck),
+        SupervisorConfig(sleep_fn=lambda s: None),
+        mesh=mesh2)
+    res = sup.mine(graphs)
+
+    assert [e.action for e in sup.events] == ["shrink"], sup.events
+    assert "1 worker" in sup.events[0].detail
+    # the shrunken attempt resumed from the level-2 checkpoint: only the
+    # faulted level onward replays
+    assert res.stats[0].level == 3, [st.level for st in res.stats]
+    assert [set(l) for l in res.levels] == [set(l) for l in ref.levels]
+    for code, sup_ in res.supports.items():
+        assert sup_ == ref.frequent[code].support
+    print("SHRINK-OK")
+""")
+
+
+def _run_snippet(snippet, *argv, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", snippet, *map(str, argv)],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_worker_loss_on_two_workers_shrinks_to_one(tmp_path):
+    assert "SHRINK-OK" in _run_snippet(SHRINK_SNIPPET, tmp_path / "ck")
