@@ -3,10 +3,15 @@
 Hadoop's reducer-count knob becomes the reduce collective's shard
 layout.  We compare the two reduce schedules (psum = every worker owns
 every key; reduce_scatter = each worker owns C/W keys, Hadoop-style) and
-report measured wall time plus the analytic wire bytes per level, which
-is what the knob actually controls at pod scale.
+report measured wall time plus the modeled wire bytes per level from
+``level_step.wire_cost_model`` — which is what the knob actually
+controls at pod scale.  The reduce_scatter row carries both layouts of
+the level wire: dense (support vector all-gathered and fetched whole by
+every worker) and sharded (each worker keeps + transfers only its C/W
+slice, DESIGN.md §11) — the sharded layout is the single-sync default.
 """
 from repro.core.graphdb import pubchem_like_db
+from repro.core.level_step import wire_cost_model
 from repro.core.mining import Mirage, MirageConfig
 
 from .common import row, timed
@@ -15,18 +20,22 @@ from .common import row, timed
 def run() -> list[str]:
     graphs = pubchem_like_db(120, seed=3, avg_edges=11)
     out = []
+    W, NP = 256, 8
     for reduce in ("psum", "reduce_scatter"):
-        cfg = MirageConfig(minsup=0.20, n_partitions=8, reduce=reduce,
+        cfg = MirageConfig(minsup=0.20, n_partitions=NP, reduce=reduce,
                            max_size=4)
         res, secs = timed(Mirage(cfg).fit, graphs)
         c_total = sum(s.n_candidates for s in res.stats)
-        # wire bytes per worker for W workers (ring factors):
-        #   psum: 2(W-1)/W * C * 4B ; rs+ag: (W-1)/W * C * (4+1)B
-        W = 256
-        psum_b = 2 * (W - 1) / W * c_total * 4
-        rs_b = (W - 1) / W * c_total * (4 + 1)
-        est = psum_b if reduce == "psum" else rs_b
+        # modeled per-worker bytes at pod scale (W=256), summed over the
+        # run's candidate volume
+        cost = wire_cost_model(c_total, NP, W, reduce=reduce)
+        derived = (f"candidates={c_total}"
+                   f";wire_bytes@256={cost['total_bytes']:.0f}")
+        if reduce == "reduce_scatter":
+            dense = wire_cost_model(c_total, NP, W, reduce=reduce,
+                                    sharded=False)
+            derived += (f";dense_wire_bytes@256={dense['total_bytes']:.0f}"
+                        f";layout=sharded")
         out.append(row(f"fig19/reduce={reduce}", secs,
-                       f"candidates={c_total};wire_bytes@256={est:.0f};"
-                       f"frequent={sum(res.counts())}"))
+                       derived + f";frequent={sum(res.counts())}"))
     return out

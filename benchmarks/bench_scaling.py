@@ -4,9 +4,40 @@ vs the PR-1 two-program driver).
 
 Workers are simulated host devices (subprocess per count so jax re-inits
 with the right device pool).  The paper's Yeast/20% setup maps to the
-yeast-like dataset; speedup is reported relative to the smallest count.
-The absolute CPU numbers are not TPU predictions — the *shape* (near-
-linear until partition granularity binds) is the reproduction.
+yeast-like dataset.
+
+Two speedup numbers per worker count, both in the derived field:
+
+``measured``  warm wall-clock ratio vs W=1 on THIS host.  Simulated
+              workers share the host's cores — on a single-core
+              container every "worker" timeshares one CPU, so measured
+              speedup cannot exceed 1 no matter how little the workers
+              communicate.  It is reported for honesty, not as the
+              scaling claim.
+``speedup``   the headline: modeled critical-path ratio, from the W=1
+              warm per-level timings.  Device map/materialize work is
+              partition-parallel (NP >> W, zero cross-partition data
+              flow), so it scales 1/W; overlapped host candgen
+              (DESIGN.md §11) sits off the critical path up to
+              max(dev/W, candgen); non-overlapped host post-processing
+              is serial.  Per level:
+
+                  t(W) = max(t_dev/W, t_cand) + t_other
+
+              with t_dev = map_seconds - candgen_seconds (the in-flight
+              window minus the host work hidden inside it), t_cand =
+              candgen_seconds, t_other = seconds - map_seconds.  The
+              same formula at W=1 is the baseline, so the ratio
+              isolates the parallelism, not the overlap win.
+
+The deterministic scaling proxy the CI gate checks is the WIRE rows:
+modeled per-level per-worker bytes from ``level_step.wire_cost_model``
+over the run's actual per-level candidate counts — the sharded wire's
+host transfer must shrink with W and undercut the dense all-gather
+layout (see benchmarks/check_scaling.py).
+
+``BENCH_SCALING_WORKERS`` (comma-separated, default "1,2,4,8") limits
+the worker counts — CI runs "1,2".
 
 The pipeline row measures steady-state (jit-warm) per-level wall time:
 each pipeline mines the same database twice in-process and the second
@@ -22,11 +53,14 @@ import textwrap
 
 from .common import row
 
+N_PARTITIONS = 16
+
 SNIPPET = textwrap.dedent("""
     import os, sys, json, time
     os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
                                + sys.argv[1])
     import jax
+    from repro.core.buckets import BucketSpec
     from repro.core.graphdb import pubchem_like_db
     from repro.core.mapreduce import MiningMesh
     from repro.core.mining import Mirage, MirageConfig
@@ -35,13 +69,25 @@ SNIPPET = textwrap.dedent("""
     w = int(sys.argv[1])
     mesh = MiningMesh(jax_compat.make_mesh((w,), ("data",)))
     graphs = pubchem_like_db(160, seed=0, avg_edges=11)
-    cfg = MirageConfig(minsup=0.20, n_partitions=16, max_size=4)
-    miner = Mirage(cfg, mesh)
-    t0 = time.perf_counter()
-    res = miner.fit(graphs)
-    print(json.dumps({"w": w, "secs": time.perf_counter() - t0,
-                      "frequent": sum(res.counts())}))
-""")
+
+    def fit():
+        cfg = MirageConfig(minsup=0.20, n_partitions=%(NP)d, max_size=4)
+        t0 = time.perf_counter()
+        res = Mirage(cfg, mesh).fit(graphs)
+        return res, time.perf_counter() - t0, cfg
+
+    fit()                               # cold run: compiles
+    res, warm_secs, cfg = fit()         # warm run: steady state
+    bk = BucketSpec(cfg.bucket_c_floor, cfg.bucket_s_floor,
+                    cfg.bucket_k_floor)
+    print(json.dumps({
+        "w": w, "secs": warm_secs, "frequent": sum(res.counts()),
+        "levels": [{"C": s.n_candidates,
+                    "Cp": bk.candidates(s.n_candidates, w),
+                    "seconds": s.seconds, "map": s.map_seconds,
+                    "cand": s.candgen_seconds} for s in res.stats],
+    }))
+""") % {"NP": N_PARTITIONS}
 
 
 PIPELINE_SNIPPET = textwrap.dedent("""
@@ -74,24 +120,83 @@ PIPELINE_SNIPPET = textwrap.dedent("""
 """)
 
 
+def _modeled_total(levels: list[dict], w: int) -> float:
+    """Critical-path model over one run's warm per-level timings (see
+    module docstring): max(t_dev/W, t_cand) + t_other per level."""
+    total = 0.0
+    for lv in levels:
+        t_dev = max(lv["map"] - lv["cand"], 0.0)
+        t_other = max(lv["seconds"] - lv["map"], 0.0)
+        total += max(t_dev / w, lv["cand"]) + t_other
+    return total
+
+
+def _wire_rows(levels: list[dict], w: int) -> list[str]:
+    """Modeled per-level per-worker wire bytes at worker count ``w``
+    (means over the run's levels), for the three layouts.  The CI gate
+    (benchmarks/check_scaling.py) reads these rows."""
+    from repro.core.level_step import wire_cost_model
+
+    acc = {"sharded": None, "dense": None, "psum": None}
+    for lv in levels:
+        costs = {
+            "sharded": wire_cost_model(lv["Cp"], N_PARTITIONS, w,
+                                       reduce="reduce_scatter"),
+            "dense": wire_cost_model(lv["Cp"], N_PARTITIONS, w,
+                                     reduce="reduce_scatter", sharded=False),
+            "psum": wire_cost_model(lv["Cp"], N_PARTITIONS, w,
+                                    reduce="psum"),
+        }
+        for k, c in costs.items():
+            if acc[k] is None:
+                acc[k] = dict.fromkeys(c, 0.0)
+            for f, v in c.items():
+                acc[k][f] += v / len(levels)
+    s, d, p = acc["sharded"], acc["dense"], acc["psum"]
+    return [row(
+        f"fig18/wire_w{w}", s["host_bytes"] * 1e-6,   # row unit is 1e-6
+        f"unit=bytes;host={s['host_bytes']:.0f}"
+        f";collective={s['collective_bytes']:.0f}"
+        f";total={s['total_bytes']:.0f}"
+        f";dense_host={d['host_bytes']:.0f}"
+        f";dense_total={d['total_bytes']:.0f}"
+        f";psum_total={p['total_bytes']:.0f};layout=sharded_rs")]
+
+
 def run() -> list[str]:
     out = []
-    base = None
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    for w in (1, 2, 4, 8):
+    workers = [int(x) for x in
+               os.environ.get("BENCH_SCALING_WORKERS", "1,2,4,8").split(",")]
+    if 1 not in workers:                 # the model needs the baseline
+        workers = [1] + workers
+
+    results = {}
+    for w in workers:
         r = subprocess.run([sys.executable, "-c", SNIPPET, str(w)],
                            capture_output=True, text=True, env=env,
                            timeout=1800)
         assert r.returncode == 0, r.stderr[-1500:]
-        d = json.loads(r.stdout.strip().splitlines()[-1])
-        if base is None:
-            base = d["secs"]
-        out.append(row(f"fig18/workers={w}", d["secs"],
-                       f"speedup={base / d['secs']:.2f}x"
-                       f";frequent={d['frequent']}"))
+        results[w] = json.loads(r.stdout.strip().splitlines()[-1])
 
+    base = results[workers[0]]
+    model1 = _modeled_total(base["levels"], 1)
+    for w in workers:
+        d = results[w]
+        modeled = model1 / _modeled_total(base["levels"], w)
+        measured = base["secs"] / d["secs"]
+        hidden = sum(lv["cand"] for lv in d["levels"])
+        out.append(row(
+            f"fig18/workers={w}", d["secs"],
+            f"speedup={modeled:.2f}x;measured={measured:.2f}x"
+            f";model=critical_path;overlap_hidden_s={hidden:.3f}"
+            f";frequent={d['frequent']}"))
+        out.extend(_wire_rows(base["levels"], w))
+
+    if os.environ.get("BENCH_SCALING_SKIP_PIPELINE"):
+        return out
     r = subprocess.run([sys.executable, "-c", PIPELINE_SNIPPET],
                        capture_output=True, text=True, env=env,
                        timeout=1800)

@@ -1,0 +1,76 @@
+"""CI gate for multi-worker scaling (the `scaling` job).
+
+    PYTHONPATH=src python -m benchmarks.check_scaling BENCH_kernels.json
+
+Wall time on shared CI runners is too noisy to gate on, so the gate
+checks the DETERMINISTIC scaling proxy: the modeled per-level wire
+bytes recorded by ``bench_scaling`` (`fig18/wire_w{1,2}` rows, from
+``level_step.wire_cost_model`` over the run's actual candidate counts).
+Two invariants, both of which the dense all-gather wire violates and
+the sharded wire restores:
+
+  1. each worker's device→host wire bytes per level at W=2 must be
+     STRICTLY below the W=1 baseline (the wire itself must shard — a
+     dense wire holds them equal, a regression grows them);
+  2. the sharded layout's total bytes at W=2 must be strictly below the
+     dense all-gather layout's at W=2 (the collective cut must not be
+     given back on the host link).
+
+Also asserts the fig18 speedup rows exist and the modeled critical-path
+speedup at W=2 exceeds 1.0 — the ROADMAP item-1 exit criterion as
+recorded in the artifact.
+"""
+import json
+import re
+import sys
+
+
+def _field(derived: str, key: str) -> float:
+    m = re.search(rf"(?:^|;){key}=([0-9.]+)", derived)
+    if m is None:
+        raise SystemExit(f"missing '{key}' in derived field: {derived!r}")
+    return float(m.group(1))
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
+    with open(path) as f:
+        rows = json.load(f)
+
+    for need in ("fig18/wire_w1", "fig18/wire_w2", "fig18/workers=1",
+                 "fig18/workers=2"):
+        if need not in rows:
+            raise SystemExit(f"{path}: missing row {need!r} — run "
+                             f"bench_scaling (fig18) first")
+
+    host1 = _field(rows["fig18/wire_w1"]["derived"], "host")
+    host2 = _field(rows["fig18/wire_w2"]["derived"], "host")
+    total2 = _field(rows["fig18/wire_w2"]["derived"], "total")
+    dense2 = _field(rows["fig18/wire_w2"]["derived"], "dense_total")
+    speedup2 = _field(rows["fig18/workers=2"]["derived"], "speedup")
+
+    failures = []
+    if not host2 < host1:
+        failures.append(
+            f"per-worker host wire bytes did not shrink: W=2 {host2:.0f}B "
+            f">= W=1 {host1:.0f}B (the wire must shard)")
+    if not total2 < dense2:
+        failures.append(
+            f"sharded total {total2:.0f}B >= dense all-gather baseline "
+            f"{dense2:.0f}B at W=2")
+    if not speedup2 > 1.0:
+        failures.append(
+            f"modeled critical-path speedup at W=2 is {speedup2:.2f}x "
+            f"(must exceed 1.0)")
+
+    if failures:
+        for f_ in failures:
+            print(f"SCALING GATE FAIL: {f_}", file=sys.stderr)
+        sys.exit(1)
+    print(f"scaling gate OK: host wire {host1:.0f}B -> {host2:.0f}B "
+          f"per worker (W=1 -> W=2), sharded total {total2:.0f}B < dense "
+          f"{dense2:.0f}B, modeled speedup {speedup2:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,11 +50,21 @@ def main() -> None:
     args = ap.parse_args()
     picks = [s for s in args.only.split(",") if s]
 
-    json_file = None
+    existing: dict[str, dict] = {}
     if args.json:
-        # open up front: an unwritable path must fail before the (long)
-        # suites run, not after
-        json_file = open(args.json, "w")
+        # probe writability up front (append mode — truncating now would
+        # destroy the artifact if a suite later crashes): an unwritable
+        # path must fail before the (long) suites run, not after
+        open(args.json, "a").close()
+        # and MERGE over the existing artifact: a partial run (--only)
+        # refreshes its own rows and preserves every other suite's —
+        # the fig17/18/19 trajectory rows the ROADMAP cites must survive
+        # kernel-only CI regenerations
+        try:
+            with open(args.json) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = {}
 
     print("name,us_per_call,derived")
     failed = []
@@ -70,10 +80,12 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
-    if json_file is not None:
-        with json_file:
-            json.dump(records, json_file, indent=2, sort_keys=True)
-        print(f"wrote {len(records)} rows to {args.json}", file=sys.stderr)
+    if args.json:
+        merged = {**existing, **records}
+        with open(args.json, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        print(f"wrote {len(records)} rows to {args.json} "
+              f"({len(merged)} total after merge)", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -72,8 +72,11 @@ class BucketSpec:
     k_floor: int = 8
 
     def candidates(self, c: int, n_workers: int) -> int:
-        """Cp: bucket, then keep the reduce_scatter divisibility
-        contract (Cp % W == 0 — a no-op for power-of-two W)."""
+        """Cp: bucket, then keep the divisibility contract Cp % W == 0
+        (a no-op for power-of-two W) that both the reduce_scatter
+        shuffle (tiled psum_scatter) and the SHARDED level wire — each
+        worker packs exactly a Cp/W support slice, DESIGN.md §11 —
+        rely on."""
         return round_up_multiple(bucket_size(c, self.c_floor), n_workers)
 
     def survivors(self, s: int, ceiling: int) -> int:

@@ -29,7 +29,8 @@ import numpy as np
 from .dfscode import Code, Edge5, code_to_graph, is_canonical, rightmost_path
 
 __all__ = ["Extension", "Candidate", "EdgeAlphabet", "generate_candidates",
-           "CandidateSchedule", "schedule_candidates", "pad_schedule"]
+           "filter_speculative", "CandidateSchedule", "schedule_candidates",
+           "pad_schedule"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +134,28 @@ def generate_candidates(
                                          Extension(True, int(w), n_v,
                                                    (int(vl[w]), e_lab, other))))
     return out
+
+
+def filter_speculative(spec: Sequence[Candidate],
+                       keep: Sequence[int]) -> list[Candidate]:
+    """Narrow a speculatively generated candidate list to the surviving
+    parents (the overlapped-candgen path, DESIGN.md §11).
+
+    ``spec`` was generated from level k's FULL candidate list — a
+    superset of the frequent set F_k, available before the device
+    program reports which candidates survived.  ``keep`` holds the
+    surviving indices, ascending.  Because ``generate_candidates``
+    visits parents in list order and each parent's extensions (RMP,
+    existing-edge set, canonicality) depend on that parent's code alone,
+    dropping non-survivors and remapping ``parent`` to its rank in
+    ``keep`` yields EXACTLY ``generate_candidates([F[i] for i in keep],
+    alphabet)`` — same candidates, same order.  The equivalence is
+    pinned by a conformance test; the speculation itself is therefore
+    semantically free, costing only wasted host work when survival is
+    sparse."""
+    rank = {int(p): r for r, p in enumerate(keep)}
+    return [dataclasses.replace(c, parent=rank[c.parent])
+            for c in spec if c.parent in rank]
 
 
 # ---------------------------------------------------------------------------

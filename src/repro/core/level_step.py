@@ -29,7 +29,9 @@ This module fuses the whole per-level dataflow into ONE jitted program:
                                 compile)
 
 The host receives exactly ONE device→host transfer per level: the packed
-int32 *wire* vector
+int32 *wire*.  The wire comes in two layouts (DESIGN.md §11):
+
+**Dense** (``psum``, or ``sharded_wire=False``) — one replicated vector:
 
   [0:Cp]      global support per (padded) candidate
   [Cp+0]      true survivor count (may exceed the cap S — driver retries)
@@ -39,12 +41,36 @@ int32 *wire* vector
   [Cp+4:-1]   the (NP,) partition permutation that was applied
   [-1]        checksum word over everything before it (DESIGN.md §10)
 
-and derives everything else (frequent verdicts, survivor ids, escalation
-and rebalance bookkeeping) host-side from it.  The checksum is computed
-on device and re-computed host-side before any field is decoded: a
-corrupted transfer triggers a bounded re-fetch from the (pristine)
-device buffer, then a ``WireIntegrityError`` — never silently wrong
-supports.
+**Sharded** (``reduce_scatter``; the default single-sync layout) — the
+wire itself is sharded over the W workers.  The support vector is never
+all-gathered on device: the ``psum_scatter`` output stays put and each
+worker packs (and transfers to the host) only its own C/W key slice,
+plus a replicated copy of the scalar words and permutation and its own
+shard checksum:
+
+  worker w's shard (length Cp/W + 4 + NP + 1):
+    [0:Cp/W]  global support for keys [w·Cp/W, (w+1)·Cp/W)
+    [...]     n_keep | overflow | rebalanced | imbalance | perm | checksum
+
+The host reassembles the canonical (Cp,) support vector by concatenating
+the verified shards (blocked dim-0 sharding ⇒ device order is key
+order) and reads the scalar words from shard 0.  Per level this removes
+the (W-1)/W·Cp·4B support all-gather from the collective phase (fig19's
+~40% wire cut) AND shrinks each worker's device→host transfer from the
+full wire to its 1/W slice — the per-iteration host traffic DIMSpan
+(arXiv 1703.01910) identifies as the distributed-FSM killer.
+
+From either layout the host derives everything else (frequent verdicts,
+survivor ids, escalation and rebalance bookkeeping).  Checksums are
+computed on device and re-computed host-side per shard before any field
+is decoded: a corrupted transfer triggers a bounded re-fetch from the
+(pristine) device buffer, then a ``WireIntegrityError`` — never
+silently wrong supports.
+
+``dispatch_level`` / :class:`PendingLevel` split the level into an
+asynchronous dispatch and the blocking wire sync, so the driver can run
+the next level's host candidate generation in the shadow of the
+in-flight device program (the overlap state machine, DESIGN.md §11).
 
 Exceptional paths — the escalation valve (overflow > 0) and a survivor-
 cap miss (n_keep > S) — fall back to the cheap materialize-only program
@@ -84,8 +110,9 @@ from ..runtime import faults, jax_compat
 from .embedding import LevelOL, materialize_one
 from .mapreduce import MiningMesh, reduce_supports
 
-__all__ = ["LevelWire", "LevelOutputs", "run_level", "unpack_wire",
-           "lpt_permutation", "wire_checksum"]
+__all__ = ["LevelWire", "LevelOutputs", "PendingLevel", "dispatch_level",
+           "run_level", "unpack_wire", "reassemble_wire", "wire_words",
+           "wire_cost_model", "lpt_permutation", "wire_checksum"]
 
 _IMBAL_FX = 1 << 16
 
@@ -111,6 +138,69 @@ def wire_checksum(wire):
     idx = xp.arange(u.shape[0], dtype=xp.uint32)
     mixed = (u ^ (idx * xp.uint32(_CSUM_SALT))) * xp.uint32(_CSUM_MIX)
     return (mixed.sum(dtype=xp.uint32) >> xp.uint32(1)).astype(xp.int32)
+
+
+def wire_words(cp: int, n_partitions: int, n_shards: int = 1) -> int:
+    """Total int32 words of the packed wire: ``n_shards`` shards of
+    [gsup slice | 4 scalars | perm | checksum].  ``n_shards=1`` is the
+    dense layout."""
+    if cp % n_shards:
+        raise ValueError(f"Cp={cp} not divisible into {n_shards} shards")
+    return cp + n_shards * (4 + n_partitions + 1)
+
+
+def reassemble_wire(host: np.ndarray, n_partitions: int,
+                    n_shards: int = 1) -> Optional[np.ndarray]:
+    """Verify a fetched wire's per-shard checksums and reassemble the
+    dense body ``[gsup (Cp) | scalars | perm]`` (checksums stripped).
+
+    Returns None when any shard fails its checksum — the caller
+    re-fetches.  With ``n_shards=1`` this is exactly the dense-layout
+    verify+strip.  Scalar words and the permutation are replicated
+    device-side; shard 0's (checksum-verified) copy is authoritative."""
+    shards = host.reshape(n_shards, -1)
+    for s in shards:
+        if int(wire_checksum(s[:-1])) != int(s[-1]):
+            return None
+    cs = shards.shape[1] - (4 + n_partitions + 1)   # gsup words per shard
+    return np.concatenate([shards[:, :cs].reshape(-1), shards[0, cs:-1]])
+
+
+def wire_cost_model(cp: int, n_partitions: int, n_workers: int, *,
+                    reduce: str, sharded: Optional[bool] = None) -> dict:
+    """Modeled per-worker wire bytes for one level (the deterministic
+    proxy the scaling CI gate checks — CPU wall time is noisy, bytes
+    are not).
+
+    ``host_bytes``       device→host transfer this worker performs for
+                         the level wire (int32 words × 4);
+    ``collective_bytes`` inter-device bytes this worker moves in the
+                         shuffle collectives (ring factors, as in
+                         ``benchmarks/bench_reducers``).
+
+    Layouts: ``psum`` — dense wire + 2(W-1)/W·Cp·4B all-reduce;
+    dense ``reduce_scatter`` (``sharded=False``) — psum_scatter (4B) +
+    verdict all-gather (1B) + support all-gather (4B), dense wire;
+    sharded ``reduce_scatter`` (default) — the support all-gather
+    disappears (each worker keeps its C/W slice; only the 1-byte
+    verdicts and the tiny (NP,) cost vector are gathered) and the host
+    transfer shrinks to the worker's own shard."""
+    W = n_workers
+    if sharded is None:
+        sharded = reduce == "reduce_scatter"
+    ring = (W - 1) / W
+    tail = 4 + n_partitions + 1                   # scalars + perm + csum
+    if reduce == "psum":
+        coll = 2 * ring * cp * 4
+        host = (cp + tail) * 4
+    elif not sharded:
+        coll = ring * (cp * 4 + cp * 1 + cp * 4)
+        host = (cp + tail) * 4
+    else:
+        coll = ring * (cp * 4 + cp * 1 + n_partitions * 4)
+        host = (cp // W + tail) * 4
+    return {"host_bytes": host, "collective_bytes": coll,
+            "total_bytes": host + coll}
 
 
 @dataclasses.dataclass
@@ -171,13 +261,20 @@ def lpt_permutation(cost: jnp.ndarray, n_workers: int) -> jnp.ndarray:
 def _level_program(mmesh: MiningMesh, minsup: int,
                    backend: Backend, reduce: str, max_embeddings: int,
                    survivor_cap: int, rebalance: bool, threshold: float,
-                   donate: bool, child_width: Optional[int]):
+                   donate: bool, child_width: Optional[int],
+                   sharded: bool):
     """Build (and cache per static config) the jitted level program.
 
     The true candidate count is a TRACED argument (``c_real``), not part
     of the cache key: only bucketed quantities (shapes, the survivor
     cap, M, the child vertex width) select a program, so levels with
-    coinciding buckets share one compile (DESIGN.md §9)."""
+    coinciding buckets share one compile (DESIGN.md §9).
+
+    With ``sharded`` the wire is packed per device INSIDE the shard_map
+    (each worker's shard carries its C/W support slice; DESIGN.md §11),
+    which requires the ``reduce_scatter`` shuffle — the support vector
+    is then never all-gathered on device.  The rebalance decision moves
+    inside too, fed by an all-gather of the tiny (NP,) cost vector."""
     axes = mmesh.axes
     W = mmesh.n_workers
     parts = mmesh.spec_parts()
@@ -186,6 +283,35 @@ def _level_program(mmesh: MiningMesh, minsup: int,
     interpret = backend == "fused_interpret"
     S = survivor_cap
     with_rebalance = rebalance and W > 1
+    if sharded and reduce != "reduce_scatter":
+        raise ValueError(
+            f"the sharded wire needs reduce='reduce_scatter' (each worker "
+            f"owns a support slice), got reduce={reduce!r}")
+
+    def _pack_wire(gsup, n_keep, overflow, do_reb, imbal, perm):
+        body = jnp.concatenate([
+            gsup.astype(jnp.int32),
+            jnp.stack([n_keep, overflow, do_reb.astype(jnp.int32),
+                       (imbal * _IMBAL_FX).astype(jnp.int32)]),
+            perm,
+        ])
+        return jnp.concatenate([body, wire_checksum(body)[None]])
+
+    def _rebalance(cost):
+        NP = cost.shape[0]
+        per_worker = cost.astype(jnp.float32).reshape(W, -1).sum(-1)
+        mean = per_worker.mean()
+        imbal = jnp.where(mean > 0, per_worker.max() / mean,
+                          jnp.float32(1.0))
+        if with_rebalance:
+            do_reb = imbal > threshold
+            perm = jnp.where(
+                do_reb, lpt_permutation(cost.astype(jnp.float32), W),
+                jnp.arange(NP, dtype=jnp.int32))
+        else:
+            do_reb = jnp.zeros((), bool)
+            perm = jnp.arange(NP, dtype=jnp.int32)
+        return do_reb, imbal, perm
 
     def core(c_real, *args):
         if fused:
@@ -202,9 +328,12 @@ def _level_program(mmesh: MiningMesh, minsup: int,
                 meta, pol, pmask, src, dst, emask, backend=backend)
             meta_can = meta
 
+        # sharded: gsup stays the psum_scatter output — this worker's
+        # (Cp/W,) key slice, never all-gathered; only the 1-byte
+        # verdicts travel the ring (the fig19 wire cut made total).
         gsup, verdict = reduce_supports(local_sup, axes, minsup, reduce,
-                                        gather_gsup=True)
-        Cp = gsup.shape[0]
+                                        gather_gsup=not sharded)
+        Cp = verdict.shape[0]
         real = jnp.arange(Cp) < c_real
         keep = (verdict != 0) & real
 
@@ -249,37 +378,34 @@ def _level_program(mmesh: MiningMesh, minsup: int,
         mask = jnp.moveaxis(mask_s, 0, 1)       # (PP, S, G, Mc)
         overflow = jax.lax.psum(over_s.sum(), axes)
         cost_pp = (emb_pp * real[None, :].astype(emb_pp.dtype)).sum(1)
-        return gsup, n_keep, overflow, ol, mask, cost_pp
+        if not sharded:
+            return gsup, n_keep, overflow, ol, mask, cost_pp
+        # sharded wire: the LPT/rebalance decision moves inside the
+        # shard_map (fed by an all-gather of the TINY (NP,) cost
+        # vector), and each worker packs its own shard — support slice,
+        # replicated scalars + perm, per-shard checksum.  The level's
+        # device→host transfer is then 1/W-sized per worker.
+        cost = jax.lax.all_gather(cost_pp, axes, axis=0, tiled=True)
+        do_reb, imbal, perm = _rebalance(cost)
+        shard = _pack_wire(gsup, n_keep, overflow, do_reb, imbal, perm)
+        return shard, ol, mask
 
     n_meta = 3 if fused else 1
+    out_specs = ((parts, parts, parts) if sharded
+                 else (rep, rep, rep, parts, parts, parts))
     smapped = jax_compat.shard_map(
         core, mesh=mmesh.mesh,
         in_specs=(rep,) * (1 + n_meta) + (parts,) * 5,
-        out_specs=(rep, rep, rep, parts, parts, parts), check_vma=False)
+        out_specs=out_specs, check_vma=False)
 
-    def program(*args):
-        gsup, n_keep, overflow, ol, mask, cost = smapped(*args)
-        NP = cost.shape[0]
-        per_worker = cost.astype(jnp.float32).reshape(W, -1).sum(-1)
-        mean = per_worker.mean()
-        imbal = jnp.where(mean > 0, per_worker.max() / mean,
-                          jnp.float32(1.0))
-        if with_rebalance:
-            do_reb = imbal > threshold
-            perm = jnp.where(
-                do_reb, lpt_permutation(cost.astype(jnp.float32), W),
-                jnp.arange(NP, dtype=jnp.int32))
-        else:
-            do_reb = jnp.zeros((), bool)
-            perm = jnp.arange(NP, dtype=jnp.int32)
-        body = jnp.concatenate([
-            gsup.astype(jnp.int32),
-            jnp.stack([n_keep, overflow, do_reb.astype(jnp.int32),
-                       (imbal * _IMBAL_FX).astype(jnp.int32)]),
-            perm,
-        ])
-        wire = jnp.concatenate([body, wire_checksum(body)[None]])
-        return wire, ol, mask
+    if sharded:
+        program = smapped
+    else:
+        def program(*args):
+            gsup, n_keep, overflow, ol, mask, cost = smapped(*args)
+            do_reb, imbal, perm = _rebalance(cost)
+            wire = _pack_wire(gsup, n_keep, overflow, do_reb, imbal, perm)
+            return wire, ol, mask
 
     donate_argnums = ()
     if donate:
@@ -313,20 +439,24 @@ def permute_stores(mmesh: MiningMesh, perm: np.ndarray, *arrays):
     return _permute_program(mmesh)(jnp.asarray(perm, jnp.int32), *arrays)
 
 
-def _fetch_wire(wire_d, level: Optional[int]) -> np.ndarray:
+def _fetch_wire(wire_d, level: Optional[int], n_partitions: int,
+                n_shards: int = 1) -> np.ndarray:
     """The ONE device→host transfer of a clean level, integrity-checked.
 
     ``np.array`` (a copy, so jax's cached host value stays pristine even
-    when the chaos hook corrupts our view) fetches the packed wire; the
-    trailing checksum word is re-computed host-side before any field is
-    decoded.  A mismatch — a flipped bit on the host link — triggers a
-    bounded re-fetch from the device buffer; persistent mismatch raises
+    when the chaos hook corrupts our view) fetches the packed wire —
+    with the sharded layout each worker contributes only its own slice
+    to that one gather.  Every shard's trailing checksum word is
+    re-computed host-side before any field is decoded.  A mismatch — a
+    flipped bit on the host link — triggers a bounded re-fetch from the
+    device buffer; persistent mismatch raises
     :class:`~repro.runtime.faults.WireIntegrityError` for the supervisor
     rather than ever decoding corrupt supports."""
     for _ in range(_WIRE_FETCH_ATTEMPTS):
         host = faults.corrupt_wire(np.array(wire_d), level)
-        if int(wire_checksum(host[:-1])) == int(host[-1]):
-            return host[:-1]
+        body = reassemble_wire(host, n_partitions, n_shards)
+        if body is not None:
+            return body
     raise faults.WireIntegrityError(
         f"level wire failed checksum {_WIRE_FETCH_ATTEMPTS}x"
         + (f" at level {level}" if level is not None else ""))
@@ -346,7 +476,40 @@ def unpack_wire(wire: np.ndarray, C: int, Cp: int, n_partitions: int
     )
 
 
-def run_level(
+@dataclasses.dataclass
+class PendingLevel:
+    """An in-flight level program: dispatched, not yet synced.
+
+    Holds the device-resident futures (JAX dispatches asynchronously, so
+    construction returns before the program finishes) plus everything
+    the host needs to decode the wire later.  ``finish()`` performs the
+    level's single blocking device→host transfer — the driver calls it
+    only after it has done the NEXT level's host candidate generation in
+    the shadow of this program (DESIGN.md §11)."""
+
+    wire_d: jax.Array          # packed wire (dense or sharded layout)
+    pol: jnp.ndarray           # (NP, S, G, M, K+1) — child OLs (future)
+    pmask: jnp.ndarray
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    emask: jnp.ndarray
+    C_real: int
+    Cp: int
+    n_partitions: int
+    n_shards: int              # 1 = dense wire; W = sharded
+    level: Optional[int]
+
+    def finish(self) -> LevelOutputs:
+        """Block on the wire (the one host sync), verify + decode it."""
+        wire = unpack_wire(
+            _fetch_wire(self.wire_d, self.level, self.n_partitions,
+                        self.n_shards),
+            self.C_real, self.Cp, self.n_partitions)
+        return LevelOutputs(wire, self.pol, self.pmask, self.src,
+                            self.dst, self.emask)
+
+
+def dispatch_level(
     mmesh: MiningMesh,
     meta_p: np.ndarray,       # (Cp, 5) padded candidate metadata (host)
     C_real: int,              # unpadded candidate count
@@ -367,27 +530,37 @@ def run_level(
     child_width: Optional[int] = None,
     sched_floor: Optional[int] = None,
     level: Optional[int] = None,
-) -> LevelOutputs:
-    """Dispatch one level program and perform the single host sync.
+    sharded: bool = False,
+) -> PendingLevel:
+    """Dispatch one level program WITHOUT the host sync.
 
     The fused backends build the parent-grouped tile schedule host-side
     (same contract as ``map_reduce_supports``), so ``meta_p`` must be
-    concrete.  Returns the unpacked wire plus the device-resident next
-    level state; the caller owns retry policy (escalation / cap miss).
+    concrete.  Returns a :class:`PendingLevel`; the caller blocks via
+    ``finish()`` when it needs the wire, and owns retry policy
+    (escalation / cap miss).
 
     ``child_width`` is the (bucketed) child vertex-slot width, default
     exact K+1; ``sched_floor`` buckets the fused schedule's row count
     so consecutive levels present one static schedule shape.
+    ``sharded`` selects the sharded wire layout (requires
+    ``reduce='reduce_scatter'`` and Cp divisible by the worker count).
     """
     Cp = meta_p.shape[0]
     n_partitions = pol.shape[0]
+    W = mmesh.n_workers
+    if sharded and Cp % W:
+        raise ValueError(
+            f"sharded wire needs the padded candidate count divisible by "
+            f"the worker count, got Cp={Cp}, W={W} (buckets.candidates / "
+            f"round_up_multiple(C, W) guarantee this in the pipeline)")
     # chaos hook: a scheduled in-kernel fault fires here, standing in for
     # an XLA/Mosaic dispatch abort (the supervisor's degradation ladder
     # answers it by swapping backends)
     faults.maybe_raise("kernel", level)
     fn = _level_program(mmesh, minsup, backend, reduce,
                         max_embeddings, survivor_cap, rebalance,
-                        threshold, donate, child_width)
+                        threshold, donate, child_width, sharded)
     c_real = jnp.asarray(C_real, jnp.int32)
     if is_fused_backend(backend):
         from .buckets import bucket_size
@@ -412,6 +585,14 @@ def run_level(
     else:
         out = fn(c_real, jnp.asarray(meta_p), pol, pmask, src, dst, emask)
     wire_d, new_pol, new_pmask = out
-    # THE one device->host transfer of the level, checksum-verified
-    wire = unpack_wire(_fetch_wire(wire_d, level), C_real, Cp, n_partitions)
-    return LevelOutputs(wire, new_pol, new_pmask, src, dst, emask)
+    return PendingLevel(wire_d, new_pol, new_pmask, src, dst, emask,
+                        C_real, Cp, n_partitions,
+                        W if sharded else 1, level)
+
+
+def run_level(*args, **kwargs) -> LevelOutputs:
+    """Dispatch one level program and perform the single host sync.
+
+    ``dispatch_level(...).finish()`` — the non-overlapped form; same
+    signature as :func:`dispatch_level`."""
+    return dispatch_level(*args, **kwargs).finish()

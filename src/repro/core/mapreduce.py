@@ -177,14 +177,25 @@ def map_reduce_supports(
 
     Returns (global_support (C,), frequent_verdict (C,), per-partition
     embed counts (NP, C)) as host numpy, in canonical candidate order
-    regardless of backend.  C must be padded to a multiple of the worker
-    count for the reduce_scatter variant (mining.py pads).  The fused
-    backends build the parent-grouped tile schedule here, host-side, so
-    ``meta`` must be concrete (numpy or committed device array).
+    regardless of backend.  The reduce_scatter variant needs the
+    candidate axis divisible by the worker count (``psum_scatter`` with
+    ``tiled=True`` splits it evenly); when C is not, the metadata is
+    transparently padded (the same rows ``mining.py`` pads with) and
+    every output is sliced back to C — per-candidate supports are
+    independent, so padding rows cannot leak.  The fused backends build the
+    parent-grouped tile schedule here, host-side, so ``meta`` must be
+    concrete (numpy or committed device array).
     """
     backend = backend or default_backend()
+    meta = np.asarray(meta)
+    C = meta.shape[0]
+    W = mmesh.n_workers
+    if reduce == "reduce_scatter" and C % W:
+        pad = W - C % W
+        meta = np.concatenate(
+            [meta, np.tile([[0, 0, 0, 1, 0]], (pad, 1))]).astype(meta.dtype)
     if is_fused_backend(backend):
-        sched = schedule_candidates(np.asarray(meta))
+        sched = schedule_candidates(meta)
         fn = _support_program_fused(mmesh, minsup, backend, reduce)
         gsup, verdict, emb_pp = fn(
             jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
@@ -193,7 +204,8 @@ def map_reduce_supports(
         fn = _support_program(mmesh, minsup, backend, reduce)
         gsup, verdict, emb_pp = fn(jnp.asarray(meta), pol, pmask, src,
                                    dst, emask)
-    return (np.asarray(gsup), np.asarray(verdict), np.asarray(emb_pp))
+    return (np.asarray(gsup)[:C], np.asarray(verdict)[:C],
+            np.asarray(emb_pp)[:, :C])
 
 
 @functools.lru_cache(maxsize=64)

@@ -50,12 +50,14 @@ import numpy as np
 from ..kernels.ops import Backend, default_backend
 from ..runtime import checkpoint as ckpt
 from ..runtime import faults
+from ..runtime.sharding import partition_sharding
 from .buckets import BucketSpec, bucket_size, round_up_multiple
-from .candgen import Candidate, EdgeAlphabet, generate_candidates
+from .candgen import (Candidate, EdgeAlphabet, filter_speculative,
+                      generate_candidates)
 from .dfscode import Code, array_to_code, code_to_array
 from .embedding import build_edge_ol, candidate_meta, level1_ol
 from .graphdb import Graph
-from .level_step import permute_stores, run_level
+from .level_step import dispatch_level, permute_stores
 from .mapreduce import MiningMesh, map_materialize, map_reduce_supports
 from .partition import make_partitions
 
@@ -115,13 +117,31 @@ class DonationPolicy:
 class MirageConfig:
     minsup: float | int                 # fraction of |G| or absolute count
     n_partitions: int = 8
-    scheme: int = 2                     # paper partition scheme (1|2)
+    scheme: int | str = 2               # partition scheme (1|2|"density")
     max_size: Optional[int] = None      # max pattern edges (None = to fixpoint)
     max_embeddings: int = 32            # M cap (exactness valve escalates)
     max_embeddings_limit: int = 512     # escalation ceiling
     max_occ: Optional[int] = None       # F pad (None = derive from data)
     backend: Optional[Backend] = None   # kernels backend (None = auto)
-    reduce: str = "psum"                # "psum" | "reduce_scatter"
+    # shuffle collective; None resolves per pipeline in __post_init__:
+    # "reduce_scatter" for single_sync (fig19: faster AND lighter on the
+    # wire), "psum" for legacy (the paper-faithful differential oracle)
+    reduce: Optional[str] = None        # "psum" | "reduce_scatter" | None
+    # sharded wire layout (DESIGN.md §11): each worker transfers only its
+    # C/W support slice.  None = auto (on whenever the reduce_scatter
+    # shuffle runs under single_sync — the slice already lives there)
+    sharded_wire: Optional[bool] = None
+    # double-buffer host candidate generation for level k+1 in the
+    # shadow of level k's in-flight device program (DESIGN.md §11)
+    overlap_candgen: bool = True
+    # speculation cost gate: the speculative candgen runs over the FULL
+    # candidate superset, |C_k|/|F_k| times the survivor-only work — at
+    # sparse survival that dwarfs the device time it hides behind.  The
+    # driver estimates its cost from a running per-parent candgen rate
+    # and skips the speculation for any level where the estimate
+    # exceeds the hiding window max(previous level's device seconds,
+    # this floor)
+    overlap_spec_window: float = 0.05
     checkpoint_dir: Optional[str] = None
     escalate_on_overflow: bool = True
     rebalance_threshold: float = 1.25   # max/mean partition cost trigger
@@ -151,6 +171,12 @@ class MirageConfig:
         if self.n_partitions < 1:
             raise ValueError(
                 f"n_partitions={self.n_partitions} must be >= 1")
+        if self.reduce is None:
+            self.reduce = ("reduce_scatter" if self.pipeline == "single_sync"
+                           else "psum")
+        if self.reduce not in ("psum", "reduce_scatter"):
+            raise ValueError(f"reduce={self.reduce!r} must be 'psum' or "
+                             f"'reduce_scatter'")
 
 
 @dataclasses.dataclass
@@ -164,6 +190,9 @@ class LevelStats:
     rebalanced: bool
     imbalance: float                    # max/mean partition embed-count
     escalations: int = 0                # M-cap doublings the valve performed
+    # host candgen seconds for the NEXT level, spent in the shadow of
+    # this level's in-flight device program (0.0 when not overlapped)
+    candgen_seconds: float = 0.0
 
 
 @dataclasses.dataclass
@@ -203,6 +232,12 @@ class _LevelOutcome:
     map_seconds: float
     escalations: int
     retried: bool = False       # level took a materialize-only retry
+    # candidates for the NEXT level, speculatively generated from ALL of
+    # this level's candidates while the device program was in flight;
+    # the driver narrows them to the surviving parents (None = not
+    # speculated — regenerate from F_{k+1} as usual)
+    spec_cands: Optional[list[Candidate]] = None
+    candgen_seconds: float = 0.0
 
 
 class Mirage:
@@ -341,9 +376,24 @@ class Mirage:
 
         # ---- phase 3: iterative mining ---------------------------------
         k = start_level
+        # overlapped candgen (DESIGN.md §11): each single-sync level
+        # speculatively generates the NEXT level's candidates while its
+        # device program is in flight; the narrowed result carries over
+        # here so the loop head only regenerates when no speculation ran
+        cands: Optional[list[Candidate]] = None
+        # speculation cost gate inputs (see overlap_spec_window): EWMA
+        # per-parent candgen rate, sampled from EVERY generation (fresh
+        # and speculative), and the last level's device-only seconds
+        cand_rate: Optional[float] = None
+        prev_dev = 0.0
         while cfg.max_size is None or k < cfg.max_size:
             t0 = time.perf_counter()
-            cands = generate_candidates(levels[-1], alphabet)
+            if cands is None:
+                cands = generate_candidates(levels[-1], alphabet)
+                if levels[-1]:
+                    r = (time.perf_counter() - t0) / len(levels[-1])
+                    cand_rate = (r if cand_rate is None
+                                 else 0.5 * (cand_rate + r))
             if not cands:
                 break
             # chaos hook: a scheduled worker death at this level
@@ -369,7 +419,11 @@ class Mirage:
                     out = self._level_single_sync(
                         meta_p, meta, C, pol, pmask, src_d, dst_d, emask_d,
                         minsup, M, ratios, child_width,
-                        level=k + 1, policy=policy)
+                        level=k + 1, policy=policy,
+                        cands=cands, alphabet=alphabet,
+                        cand_rate=cand_rate,
+                        spec_window=max(prev_dev,
+                                        cfg.overlap_spec_window))
                 except DonationRetryRebuild:
                     # the armed-donation gamble lost: the arena consumed
                     # the parents, so restore them from the latest intact
@@ -379,6 +433,11 @@ class Mirage:
                     policy.record_rebuild()
                     continue
                 policy.record(out.retried)
+            prev_dev = max(out.map_seconds - out.candgen_seconds, 0.0)
+            if out.spec_cands is not None and cands:
+                r = out.candgen_seconds / len(cands)
+                cand_rate = (r if cand_rate is None
+                             else 0.5 * (cand_rate + r))
             M = out.max_embeddings
             total_overflow += out.overflow
 
@@ -386,7 +445,7 @@ class Mirage:
                 stats.append(LevelStats(k + 1, C, 0, out.overflow,
                                         time.perf_counter() - t0,
                                         out.map_seconds, False, out.imbalance,
-                                        out.escalations))
+                                        out.escalations, out.candgen_seconds))
                 break
 
             pol, pmask = out.pol, out.pmask
@@ -401,12 +460,18 @@ class Mirage:
             stats.append(LevelStats(k + 1, C, len(out.keep), out.overflow,
                                     time.perf_counter() - t0,
                                     out.map_seconds, out.rebalanced,
-                                    out.imbalance, out.escalations))
+                                    out.imbalance, out.escalations,
+                                    out.candgen_seconds))
 
             if cfg.checkpoint_dir:
                 self._save(cfg.checkpoint_dir, k + 1, levels, supports,
                            pol, pmask, M, total_overflow, order)
                 policy.can_rebuild = True
+            # narrow this level's speculative superset (generated from
+            # ALL candidates) to the surviving parents — provably equal
+            # to generate_candidates(F_{k+1}), see filter_speculative
+            cands = (filter_speculative(out.spec_cands, out.keep)
+                     if out.spec_cands is not None else None)
             k += 1
 
         return DistMiningResult(levels, supports, stats, alphabet, minsup,
@@ -439,10 +504,23 @@ class Mirage:
         state, _ = ckpt.load_step(self.cfg.checkpoint_dir)
         pol, pmask = self._repad_saved(state["pol"], state["pmask"])
         pol, pmask = pol[order], pmask[order]
-        sharding = jax.sharding.NamedSharding(
-            self.mesh.mesh, self.mesh.spec_parts())
+        sharding = partition_sharding(self.mesh.mesh)
         return (jax.device_put(jnp.asarray(pol), sharding),
                 jax.device_put(jnp.asarray(pmask), sharding))
+
+    # ------------------------------------------------------------------
+    def _sharded_wire(self) -> bool:
+        """Resolve the sharded-wire tri-state: explicit config wins;
+        auto means on whenever the reduce_scatter shuffle runs under the
+        single-sync pipeline (the support slice already lives sharded on
+        each worker — gathering it just to re-slice host-side is the
+        waste the layout removes)."""
+        cfg = self.cfg
+        if cfg.pipeline != "single_sync":
+            return False
+        if cfg.sharded_wire is not None:
+            return cfg.sharded_wire
+        return cfg.reduce == "reduce_scatter"
 
     # ------------------------------------------------------------------
     def _buckets(self) -> Optional[BucketSpec]:
@@ -492,10 +570,25 @@ class Mirage:
                            emask, minsup, M, ratios,
                            child_width: Optional[int] = None, *,
                            level: Optional[int] = None,
-                           policy: Optional[DonationPolicy] = None
+                           policy: Optional[DonationPolicy] = None,
+                           cands: Optional[list[Candidate]] = None,
+                           alphabet: Optional[EdgeAlphabet] = None,
+                           cand_rate: Optional[float] = None,
+                           spec_window: Optional[float] = None
                            ) -> _LevelOutcome:
         """One level through the device-resident program: a single
         dispatch and a single device→host sync on the wire vector.
+
+        The dispatch is asynchronous (:class:`~.level_step.PendingLevel`):
+        with ``overlap_candgen`` the host generates the NEXT level's
+        candidates from this level's FULL candidate list (a superset of
+        the frequent set — per-parent generation is independent, so the
+        driver later narrows it exactly) while the device program runs,
+        and blocks on the wire only afterwards.  The speculation only
+        runs when its estimated cost (``cand_rate`` seconds/parent ×
+        the superset size) fits the ``spec_window`` it would hide in —
+        at sparse survival the superset is many times the frequent set
+        and generating it would cost far more than it saves.
 
         Exceptional paths re-use the still-valid pass-1 supports and fall
         back to the cheap materialize-only program from the preserved
@@ -521,7 +614,7 @@ class Mirage:
         donated = cfg.donate and (not may_retry
                                   or (policy is not None and policy.armed))
         t_map = time.perf_counter()
-        out = run_level(
+        pending = dispatch_level(
             self.mesh, meta_p, C, pol, pmask, src, dst, emask,
             minsup=minsup, backend=backend, reduce=cfg.reduce,
             max_embeddings=M, survivor_cap=S,
@@ -529,7 +622,21 @@ class Mirage:
             donate=donated,
             child_width=child_width,
             sched_floor=bk.c_floor if bk is not None else None,
-            level=level)
+            level=level, sharded=self._sharded_wire())
+        # the overlap window: the device program is in flight, the host
+        # is free — speculate the next level's candidates now
+        spec_cands = None
+        cand_secs = 0.0
+        if cfg.overlap_candgen and cands is not None and alphabet is not None:
+            window = (cfg.overlap_spec_window if spec_window is None
+                      else spec_window)
+            est = (cand_rate or 0.0) * len(cands)
+            if est <= window:
+                t_cand = time.perf_counter()
+                spec_cands = generate_candidates([c.code for c in cands],
+                                                 alphabet)
+                cand_secs = time.perf_counter() - t_cand
+        out = pending.finish()
         w = out.wire
         map_secs = time.perf_counter() - t_map
 
@@ -583,7 +690,8 @@ class Mirage:
             rebalanced=w.rebalanced and n > 0, imbalance=w.imbalance,
             perm=w.perm if (w.rebalanced and n > 0) else None,
             map_seconds=map_secs, escalations=escalations,
-            retried=retried)
+            retried=retried, spec_cands=spec_cands,
+            candgen_seconds=cand_secs)
 
     # ------------------------------------------------------------------
     def _level_legacy(self, meta_p, meta, C, pol, pmask, src, dst, emask,
@@ -646,8 +754,7 @@ class Mirage:
             escalations += 1
 
     def _device_put(self, pol, pmask, src, dst, emask):
-        sharding = jax.sharding.NamedSharding(
-            self.mesh.mesh, self.mesh.spec_parts())
+        sharding = partition_sharding(self.mesh.mesh)
         return tuple(jax.device_put(jnp.asarray(x), sharding)
                      for x in (pol, pmask, src, dst, emask))
 

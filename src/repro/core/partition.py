@@ -5,10 +5,17 @@ more partitions than workers (paper Fig. 20: mapper cost is exponential
 in partition size, shuffle cost only linear) — and strips globally
 infrequent edges while doing so (paper Fig. 11).
 
-Two schemes, as in the paper:
-  scheme 1 — balance the number of graphs per partition;
+Three schemes:
+  scheme 1 — balance the number of graphs per partition (paper);
   scheme 2 — balance the total number of *edges* per partition (greedy
-             LPT bin packing), the load-balancing win of Table IV.
+             LPT bin packing), the load-balancing win of Table IV (paper);
+  "density" — balance edge DENSITY, à la Aridhi et al. (arXiv
+             1212.0017): graphs sorted by density 2E/(V(V-1)) and
+             snake-dealt across partitions, so the densest graphs — the
+             ones whose embedding joins dominate map cost superlinearly
+             in E — spread evenly instead of pooling in one LPT bin and
+             serializing a shard.  Edge count is the tie-break within
+             equal density, graph count the final tie-break.
 """
 from __future__ import annotations
 
@@ -21,7 +28,8 @@ from .graphdb import Graph, validate_db
 from .host_miner import frequent_edges
 from .candgen import EdgeAlphabet
 
-__all__ = ["PartitionResult", "filter_infrequent_edges", "make_partitions"]
+__all__ = ["PartitionResult", "filter_infrequent_edges", "graph_density",
+           "make_partitions"]
 
 
 @dataclasses.dataclass
@@ -48,12 +56,19 @@ def filter_infrequent_edges(
     return out, alphabet
 
 
+def graph_density(g: Graph) -> float:
+    """Undirected edge density 2E/(V(V-1)); a single-vertex (or empty)
+    graph has density 0 by convention."""
+    v = g.n_vertices
+    return 0.0 if v < 2 else 2.0 * g.n_edges / (v * (v - 1))
+
+
 def make_partitions(
     graphs: Sequence[Graph],
     minsup: int | float,
     n_partitions: int,
     *,
-    scheme: int = 2,
+    scheme: int | str = 2,
 ) -> PartitionResult:
     """Filter + split.  ``minsup`` may be absolute (int) or a fraction.
 
@@ -96,8 +111,20 @@ def make_partitions(
                     key=lambda b: (load[b], len(parts[b])))
             parts[p].append(i)
             load[p] += filtered[i].n_edges
+    elif scheme == "density":
+        # densest graphs first, snake-dealt (0..NP-1, NP-1..0, ...): each
+        # pass hands every partition exactly one graph of comparable
+        # density, and the direction flip cancels the within-pass bias —
+        # graph counts stay balanced (|Δ| <= 1) by construction, so no
+        # partition starves even when the DB is density-uniform
+        order = sorted(ids, key=lambda i: (-graph_density(filtered[i]),
+                                           -filtered[i].n_edges))
+        for rank, i in enumerate(order):
+            sweep, pos = divmod(rank, n_partitions)
+            parts[pos if sweep % 2 == 0 else
+                  n_partitions - 1 - pos].append(i)
     else:
-        raise ValueError(f"unknown scheme {scheme}")
+        raise ValueError(f"unknown scheme {scheme!r} (1 | 2 | 'density')")
 
     return PartitionResult(
         partitions=[[filtered[i] for i in p] for p in parts],

@@ -19,11 +19,21 @@ def main() -> None:
     ap.add_argument("--minsup", type=float, default=0.2,
                     help="fraction (0,1) or absolute count (>=1)")
     ap.add_argument("--partitions", type=int, default=8)
-    ap.add_argument("--scheme", type=int, default=2, choices=[1, 2])
+    ap.add_argument("--scheme", default="2", choices=["1", "2", "density"],
+                    help="partition scheme: 1 = graph count, 2 = LPT by "
+                         "edges, density = snake-deal by edge density "
+                         "(Aridhi et al., arXiv 1212.0017)")
     ap.add_argument("--max-size", type=int, default=None)
     ap.add_argument("--max-embeddings", type=int, default=32)
-    ap.add_argument("--reduce", default="psum",
-                    choices=["psum", "reduce_scatter"])
+    ap.add_argument("--reduce", default=None,
+                    choices=["psum", "reduce_scatter"],
+                    help="shuffle collective (default: reduce_scatter "
+                         "for single_sync, psum for legacy)")
+    ap.add_argument("--dense-wire", action="store_true",
+                    help="disable the sharded wire layout (each worker "
+                         "then fetches the FULL support vector)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable overlapped host candidate generation")
     ap.add_argument("--backend", default=None,
                     choices=[None, "ref", "pallas", "interpret", "fused",
                              "fused_interpret"])
@@ -73,10 +83,13 @@ def main() -> None:
         c, s, k = (int(x) for x in args.bucket_floors.split(","))
         bucket_kw = dict(bucket_c_floor=c, bucket_s_floor=s,
                          bucket_k_floor=k)
+    scheme = args.scheme if args.scheme == "density" else int(args.scheme)
     cfg = MirageConfig(
-        minsup=minsup, n_partitions=args.partitions, scheme=args.scheme,
+        minsup=minsup, n_partitions=args.partitions, scheme=scheme,
         max_size=args.max_size, max_embeddings=args.max_embeddings,
         reduce=args.reduce, backend=args.backend,
+        sharded_wire=False if args.dense_wire else None,
+        overlap_candgen=not args.no_overlap,
         pipeline=args.pipeline, checkpoint_dir=args.ckpt_dir,
         bucket_shapes=not args.no_bucket, **bucket_kw)
 
@@ -103,7 +116,7 @@ def main() -> None:
                   f"{ev.level} -> {ev.action} ({ev.detail})")
     print(f"[mine] |G|={len(graphs)} minsup={res.minsup} "
           f"partitions={args.partitions} scheme={args.scheme} "
-          f"reduce={args.reduce}")
+          f"reduce={cfg.reduce}")
     print(f"[mine] frequent patterns: {sum(res.counts())} "
           f"(per level: {res.counts()})")
     print(f"[mine] wall: {dt:.2f}s  overflow: {res.total_overflow}")

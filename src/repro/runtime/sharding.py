@@ -23,7 +23,23 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["param_specs", "param_shardings", "batch_specs", "cache_specs",
-           "fsdp_axes", "logical_rules", "active_mesh", "shard_hint"]
+           "fsdp_axes", "logical_rules", "active_mesh", "shard_hint",
+           "partition_sharding"]
+
+
+# ---------------------------------------------------------------------------
+# mining-store sharding
+# ---------------------------------------------------------------------------
+def partition_sharding(mesh: Mesh) -> NamedSharding:
+    """Partition-major NamedSharding for the mining stores (OL, edge-OL:
+    dim 0 is the graph-partition axis, blocked over every mesh axis).
+
+    The one placement rule of the mining side, shared by the driver's
+    device_put, checkpoint-resume resharding and the parent rebuild —
+    and the invariant the SHARDED level wire leans on: blocked dim-0
+    sharding means device order IS partition/key order, so concatenated
+    wire shards reassemble by simple concatenation (DESIGN.md §11)."""
+    return NamedSharding(mesh, P(mesh.axis_names))
 
 # ---------------------------------------------------------------------------
 # activation sharding hints

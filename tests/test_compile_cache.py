@@ -124,17 +124,24 @@ def test_bucketed_wire_supports_match_legacy(monkeypatch):
     packed wire."""
     graphs = path_db(n_graphs=5, length=8)
     wires = []
-    orig = mining.run_level
+    orig = mining.dispatch_level
 
     def spy(*args, **kw):
-        out = orig(*args, **kw)
-        wires.append(np.asarray(out.wire.gsup))
-        return out
+        pending = orig(*args, **kw)
+        inner = pending.finish
 
-    monkeypatch.setattr(mining, "run_level", spy)
+        def finish():
+            out = inner()
+            wires.append(np.asarray(out.wire.gsup))
+            return out
+
+        pending.finish = finish
+        return pending
+
+    monkeypatch.setattr(mining, "dispatch_level", spy)
     res = Mirage(MirageConfig(minsup=5, n_partitions=1, max_size=5,
                               bucket_shapes=True)).fit(graphs)
-    monkeypatch.setattr(mining, "run_level", orig)
+    monkeypatch.setattr(mining, "dispatch_level", orig)
 
     legacy = Mirage(MirageConfig(minsup=5, n_partitions=1, max_size=5,
                                  pipeline="legacy")).fit(graphs)
