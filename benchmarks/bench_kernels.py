@@ -162,8 +162,55 @@ def run():
     assert np.array_equal(np.asarray(e_r), np.asarray(e_fk))
     yield row("kernels/pallas_interpret_parity", 0.0, "exact")
 
+    yield from _bench_packed()
     yield from _bench_bucketing()
     yield from _bench_recovery()
+
+
+def _bench_packed():
+    """Bit-packed support path (DESIGN.md §12): time the packed fused
+    kernel against the dense fused kernel (interpret-mode CPU proxy,
+    parity asserted bit-exact), then record the DETERMINISTIC modeled
+    support-path bytes — verdict HBM lanes, reduce_scatter verdict
+    collective, gsup wire slice — dense vs packed at the default shape.
+    The byte rows are what ``benchmarks/check_packed.py`` gates on
+    (wall time on shared runners is noise; the byte model is not)."""
+    from repro.kernels.bitset import support_path_cost_model
+
+    d = DEFAULT_SHAPE
+    grouped = _inputs(**d, grouped=True)
+    C = grouped[0].shape[0]
+    dense = lambda: jax.block_until_ready(level_supports(
+        *grouped, backend="fused_interpret", tile_g=TILE_G, tile_c=TILE_C))
+    packed = lambda: jax.block_until_ready(level_supports(
+        *grouped, backend="fused_packed_interpret", tile_g=TILE_G,
+        tile_c=TILE_C))
+    dense(); packed()                        # compile
+    (s_d, e_d), secs_d = timed(dense, repeats=3)
+    (s_p, e_p), secs_p = timed(packed, repeats=3)
+    assert np.array_equal(np.asarray(s_p), np.asarray(s_d))
+    assert np.array_equal(np.asarray(e_p), np.asarray(e_d))
+    yield row("kernels/fused_packed(64cand,256graph,grouped)", secs_p,
+              f"per_candidate_us={secs_p / C * 1e6:.1f};"
+              f"dense_ratio={secs_p / max(secs_d, 1e-9):.2f}")
+
+    # misaligned parity (G % 32 != 0, C % tile_c != 0): the ragged-tail
+    # gmask contract, checked where the bench artifact can prove it
+    small = _inputs(C=7, G=20, M=8, K=4, T=4, F=8, seed=1)
+    s_r, e_r = level_supports(*small, backend="ref")
+    s_pk, e_pk = level_supports(*small, backend="fused_packed_interpret",
+                                tile_g=32, tile_c=4)
+    assert np.array_equal(np.asarray(s_r), np.asarray(s_pk))
+    assert np.array_equal(np.asarray(e_r), np.asarray(e_pk))
+    yield row("kernels/packed_parity", 0.0, "exact")
+
+    for w in (1, 2, 4, 8):
+        db = support_path_cost_model(d["C"], d["G"], w, packed=False)
+        pb = support_path_cost_model(d["C"], d["G"], w, packed=True)
+        yield row(f"kernels/packed_support_path_w{w}", 0.0,
+                  f"dense_bytes={db['total_bytes']:.0f};"
+                  f"packed_bytes={pb['total_bytes']:.0f};"
+                  f"reduction={db['total_bytes'] / pb['total_bytes']:.2f}")
 
 
 def _bench_bucketing():

@@ -1,0 +1,78 @@
+"""CI gate for the bit-packed support path (the `tier1` job).
+
+    PYTHONPATH=src python -m benchmarks.check_packed BENCH_kernels.json
+
+Wall time on shared CI runners is too noisy to gate on, so the gate
+checks the DETERMINISTIC proxy recorded by ``bench_kernels``: the
+modeled support-path bytes (verdict HBM lanes + reduce_scatter verdict
+collective + gsup wire slice, from ``bitset.support_path_cost_model``)
+for the dense int32 path vs the bit-packed path, at the default shape
+across worker counts.  Two invariants:
+
+  1. every ``kernels/packed_support_path_w{W}`` row must show the
+     packed bytes undercutting the dense baseline by at least 8x (the
+     ISSUE-8 acceptance floor; the layout's asymptotic win is 32x on
+     the HBM term);
+  2. the packed-parity row must exist and read ``exact`` — the byte win
+     only counts if the packed kernel stayed bit-identical.
+"""
+import json
+import re
+import sys
+
+
+def _field(derived: str, key: str) -> float:
+    m = re.search(rf"(?:^|;){key}=([0-9.]+)", derived)
+    if m is None:
+        raise SystemExit(f"missing '{key}' in derived field: {derived!r}")
+    return float(m.group(1))
+
+
+MIN_REDUCTION = 8.0
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
+    with open(path) as f:
+        rows = json.load(f)
+
+    worker_rows = sorted(r for r in rows
+                         if r.startswith("kernels/packed_support_path_w"))
+    if not worker_rows:
+        raise SystemExit(f"{path}: no kernels/packed_support_path_w* rows "
+                         f"— run bench_kernels first")
+    if "kernels/packed_parity" not in rows:
+        raise SystemExit(f"{path}: missing kernels/packed_parity row")
+
+    failures = []
+    if rows["kernels/packed_parity"]["derived"] != "exact":
+        failures.append(
+            f"packed parity is "
+            f"{rows['kernels/packed_parity']['derived']!r}, not 'exact'")
+    reductions = {}
+    for name in worker_rows:
+        derived = rows[name]["derived"]
+        dense = _field(derived, "dense_bytes")
+        packed = _field(derived, "packed_bytes")
+        reduction = _field(derived, "reduction")
+        reductions[name] = reduction
+        if not packed < dense:
+            failures.append(
+                f"{name}: packed {packed:.0f}B >= dense {dense:.0f}B")
+        if reduction < MIN_REDUCTION:
+            failures.append(
+                f"{name}: support-path byte reduction {reduction:.2f}x "
+                f"below the {MIN_REDUCTION:.0f}x floor")
+
+    if failures:
+        for f_ in failures:
+            print(f"PACKED GATE FAIL: {f_}", file=sys.stderr)
+        sys.exit(1)
+    summary = ", ".join(f"{n.rsplit('_', 1)[1]}={r:.1f}x"
+                        for n, r in reductions.items())
+    print(f"packed gate OK: support-path byte reduction {summary} "
+          f"(floor {MIN_REDUCTION:.0f}x), parity exact")
+
+
+if __name__ == "__main__":
+    main()

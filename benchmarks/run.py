@@ -10,6 +10,7 @@ tracked across PRs instead of scraped from stdout.
 """
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -27,6 +28,35 @@ SUITES = {
     "table3_naive": bench_naive,
     "kernels": bench_kernels,
 }
+
+
+def load_existing(path: str) -> dict:
+    """Read the bench-trajectory artifact about to be merged into.
+
+    A missing or empty file is a fresh start (the writability probe in
+    ``main`` creates empty files).  A file that EXISTS but fails to
+    parse is a real artifact in an unknown state — silently treating it
+    as ``{}`` used to let the merge-and-rewrite below destroy the whole
+    perf trajectory.  Instead the corrupt bytes are moved aside to
+    ``<path>.bad`` (preserved for forensics) and the run continues with
+    a fresh artifact, loudly.
+    """
+    try:
+        with open(path) as f:
+            text = f.read()
+    except FileNotFoundError:
+        return {}
+    if not text.strip():
+        return {}
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError as e:
+        bad = path + ".bad"
+        os.replace(path, bad)
+        print(f"WARNING: existing {path} is not valid JSON ({e}); "
+              f"moved it to {bad} and starting a fresh artifact",
+              file=sys.stderr)
+        return {}
 
 
 def parse_row(line: str) -> tuple[str, dict]:
@@ -59,12 +89,9 @@ def main() -> None:
         # and MERGE over the existing artifact: a partial run (--only)
         # refreshes its own rows and preserves every other suite's —
         # the fig17/18/19 trajectory rows the ROADMAP cites must survive
-        # kernel-only CI regenerations
-        try:
-            with open(args.json) as f:
-                existing = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            existing = {}
+        # kernel-only CI regenerations.  A corrupt artifact is backed
+        # up to .bad, never silently overwritten (see load_existing).
+        existing = load_existing(args.json)
 
     print("name,us_per_call,derived")
     failed = []

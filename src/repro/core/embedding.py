@@ -41,8 +41,8 @@ from .host_miner import OccurrenceList
 __all__ = [
     "EdgeOL", "LevelOL", "CandidateMeta",
     "build_edge_ol", "level1_ol", "candidate_meta",
-    "join_valid", "local_supports_ref", "materialize_one",
-    "materialize_ol",
+    "join_valid", "local_supports_ref", "support_bits_ref",
+    "materialize_one", "materialize_ol",
 ]
 
 PAD = -1
@@ -203,6 +203,45 @@ def local_supports_ref(
 
     sup, cnt = jax.lax.map(one, meta)
     return sup, cnt
+
+
+def support_bits_ref(
+    meta: jnp.ndarray,     # (C, 5)
+    pol: jnp.ndarray,      # (P, G, M, K)
+    pmask: jnp.ndarray,    # (P, G, M)
+    src: jnp.ndarray,      # (T, G, F)
+    dst: jnp.ndarray,
+    emask: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Bitset-shaped support masks — the pure-jnp oracle for the packed
+    fused kernel (DESIGN.md §12).
+
+    Per candidate, the boolean per-graph verdict packs to a
+    ``ceil(G/32)``-word uint32 bitset (LSB-first, pad bits zero) and
+    local support is popcount over the words — bit-identical to
+    ``local_supports_ref`` by construction.  Returns
+    ``(sup (C,), emb (C,), vbits (C, ceil(G/32)))``.
+    """
+    from repro.kernels.bitset import pack_bits, popcount, tail_mask
+
+    G = pol.shape[1]
+    gmask = jnp.asarray(tail_mask(G))
+
+    def one(cand):
+        parent, stub, to, fwd, tidx = (cand[0], cand[1], cand[2], cand[3],
+                                       cand[4])
+        p = jnp.take(pol, parent, axis=0)
+        pm = jnp.take(pmask, parent, axis=0).astype(bool)
+        s = jnp.take(src, tidx, axis=0)
+        d = jnp.take(dst, tidx, axis=0)
+        em = jnp.take(emask, tidx, axis=0).astype(bool)
+        valid = join_valid(p, pm, s, d, em, stub, to, fwd)
+        bits = pack_bits(valid.any(axis=(1, 2))) & gmask
+        return bits, valid.sum(dtype=jnp.int32)
+
+    vbits, emb = jax.lax.map(one, meta)
+    sup = popcount(vbits).sum(-1, dtype=jnp.int32)
+    return sup, emb, vbits
 
 
 def materialize_one(

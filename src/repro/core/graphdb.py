@@ -77,9 +77,17 @@ class Graph:
                 out.append((int(a), int(el)))
         return out
 
-    def drop_edges(self, keep: np.ndarray) -> "Graph":
-        """Return a copy keeping only edges where ``keep`` is True, dropping
-        now-isolated vertices and re-densifying vertex ids."""
+    def keep_edges(self, keep: np.ndarray) -> "Graph":
+        """Return a copy with only the edges where ``keep`` is True,
+        dropping now-isolated vertices and re-densifying vertex ids.
+
+        ``keep`` is a KEEP mask, not a drop mask::
+
+            >>> g = Graph(np.array([0, 1, 2]),
+            ...           np.array([[0, 1], [1, 2]]), np.array([7, 8]))
+            >>> g.keep_edges(np.array([True, False])).n_edges  # keeps 0-1
+            1
+        """
         edges = self.edges[keep]
         elabels = self.elabels[keep]
         used = np.zeros(self.n_vertices, dtype=bool)
@@ -89,6 +97,16 @@ class Graph:
         remap[used] = np.arange(int(used.sum()), dtype=np.int32)
         new_edges = remap[edges] if edges.size else edges
         return Graph(self.vlabels[used], new_edges, elabels)
+
+    def drop_edges(self, keep: np.ndarray) -> "Graph":
+        """Deprecated alias of :meth:`keep_edges`.  Despite the name,
+        the argument has always been a KEEP mask — the rename makes the
+        polarity explicit at call sites."""
+        import warnings
+        warnings.warn("Graph.drop_edges(keep) is deprecated: the mask "
+                      "selects edges to KEEP — use Graph.keep_edges",
+                      DeprecationWarning, stacklevel=2)
+        return self.keep_edges(keep)
 
 
 @dataclasses.dataclass

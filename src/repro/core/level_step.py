@@ -54,7 +54,16 @@ shard checksum:
 
 The host reassembles the canonical (Cp,) support vector by concatenating
 the verified shards (blocked dim-0 sharding ⇒ device order is key
-order) and reads the scalar words from shard 0.  Per level this removes
+order) and reads the scalar words from shard 0.
+
+**Packed** (DESIGN.md §12; orthogonal to dense/sharded, default for
+single-sync): either layout's gsup slice ships two uint16 supports per
+int32 word — the checksum covers the packed words, and
+``reassemble_wire`` expands the slice back to int32 only after
+verification, so ``unpack_wire`` sees an identical body.  Upstream of
+the wire, ``packed`` also selects the bitset kernel (verdict bitsets in
+VMEM, AND+popcount support counting) and bit-packed verdict lanes in
+the reduce_scatter shuffle.  Per level this removes
 the (W-1)/W·Cp·4B support all-gather from the collective phase (fig19's
 ~40% wire cut) AND shrinks each worker's device→host transfer from the
 full wire to its 1/W slice — the per-iteration host traffic DIMSpan
@@ -105,7 +114,8 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from ..kernels.ops import (Backend, device_local_supports,
-                           fused_level_supports, is_fused_backend)
+                           fused_level_supports,
+                           fused_level_supports_packed, is_fused_backend)
 from ..runtime import faults, jax_compat
 from .embedding import LevelOL, materialize_one
 from .mapreduce import MiningMesh, reduce_supports
@@ -140,34 +150,58 @@ def wire_checksum(wire):
     return (mixed.sum(dtype=xp.uint32) >> xp.uint32(1)).astype(xp.int32)
 
 
-def wire_words(cp: int, n_partitions: int, n_shards: int = 1) -> int:
+def wire_words(cp: int, n_partitions: int, n_shards: int = 1,
+               packed: bool = False) -> int:
     """Total int32 words of the packed wire: ``n_shards`` shards of
     [gsup slice | 4 scalars | perm | checksum].  ``n_shards=1`` is the
-    dense layout."""
+    dense layout.  With ``packed`` (DESIGN.md §12) each shard's gsup
+    slice ships two uint16 supports per int32 word — ``ceil(cs/2)``
+    words for a ``cs``-support slice."""
     if cp % n_shards:
         raise ValueError(f"Cp={cp} not divisible into {n_shards} shards")
-    return cp + n_shards * (4 + n_partitions + 1)
+    cs = cp // n_shards
+    gw = -(-cs // 2) if packed else cs
+    return n_shards * (gw + 4 + n_partitions + 1)
 
 
 def reassemble_wire(host: np.ndarray, n_partitions: int,
-                    n_shards: int = 1) -> Optional[np.ndarray]:
+                    n_shards: int = 1, *, packed: bool = False,
+                    cp: Optional[int] = None) -> Optional[np.ndarray]:
     """Verify a fetched wire's per-shard checksums and reassemble the
     dense body ``[gsup (Cp) | scalars | perm]`` (checksums stripped).
 
     Returns None when any shard fails its checksum — the caller
     re-fetches.  With ``n_shards=1`` this is exactly the dense-layout
     verify+strip.  Scalar words and the permutation are replicated
-    device-side; shard 0's (checksum-verified) copy is authoritative."""
+    device-side; shard 0's (checksum-verified) copy is authoritative.
+
+    With ``packed`` each shard's gsup slice carries two uint16 supports
+    per int32 word (``cp`` — the padded candidate total — is then
+    required to locate the field boundaries).  The checksum is verified
+    over the PACKED words exactly as the device computed it, and only
+    then is the slice expanded back to int32 supports, so the returned
+    body is layout-independent and ``unpack_wire`` never changes."""
     shards = host.reshape(n_shards, -1)
     for s in shards:
         if int(wire_checksum(s[:-1])) != int(s[-1]):
             return None
-    cs = shards.shape[1] - (4 + n_partitions + 1)   # gsup words per shard
-    return np.concatenate([shards[:, :cs].reshape(-1), shards[0, cs:-1]])
+    if not packed:
+        cs = shards.shape[1] - (4 + n_partitions + 1)  # gsup words/shard
+        return np.concatenate([shards[:, :cs].reshape(-1), shards[0, cs:-1]])
+    if cp is None:
+        raise ValueError("packed wire reassembly needs cp")
+    cs = cp // n_shards                                # supports per shard
+    gw = -(-cs // 2)                                   # packed words
+    u = shards[:, :gw].astype(np.uint32)
+    lo = (u & np.uint32(0xFFFF)).astype(np.int32)
+    hi = (u >> np.uint32(16)).astype(np.int32)
+    gsup = np.stack([lo, hi], axis=-1).reshape(n_shards, -1)[:, :cs]
+    return np.concatenate([gsup.reshape(-1), shards[0, gw:-1]])
 
 
 def wire_cost_model(cp: int, n_partitions: int, n_workers: int, *,
-                    reduce: str, sharded: Optional[bool] = None) -> dict:
+                    reduce: str, sharded: Optional[bool] = None,
+                    packed: bool = False) -> dict:
     """Modeled per-worker wire bytes for one level (the deterministic
     proxy the scaling CI gate checks — CPU wall time is noisy, bytes
     are not).
@@ -184,21 +218,31 @@ def wire_cost_model(cp: int, n_partitions: int, n_workers: int, *,
     sharded ``reduce_scatter`` (default) — the support all-gather
     disappears (each worker keeps its C/W slice; only the 1-byte
     verdicts and the tiny (NP,) cost vector are gathered) and the host
-    transfer shrinks to the worker's own shard."""
+    transfer shrinks to the worker's own shard.
+
+    ``packed`` (DESIGN.md §12) shrinks the reduce_scatter verdict
+    all-gather to bit lanes (``ceil(cp/32)`` uint32 words instead of
+    ``cp`` int8 lanes) and the wire's gsup slice to two uint16 supports
+    per int32 word."""
     W = n_workers
     if sharded is None:
         sharded = reduce == "reduce_scatter"
     ring = (W - 1) / W
     tail = 4 + n_partitions + 1                   # scalars + perm + csum
+    vbytes = (-(-cp // 32) * 4) if packed else cp * 1   # verdict gather
+
+    def gw(n):                                    # gsup words on the wire
+        return -(-n // 2) if packed else n
+
     if reduce == "psum":
         coll = 2 * ring * cp * 4
-        host = (cp + tail) * 4
+        host = (gw(cp) + tail) * 4
     elif not sharded:
-        coll = ring * (cp * 4 + cp * 1 + cp * 4)
-        host = (cp + tail) * 4
+        coll = ring * (cp * 4 + vbytes + cp * 4)
+        host = (gw(cp) + tail) * 4
     else:
-        coll = ring * (cp * 4 + cp * 1 + n_partitions * 4)
-        host = (cp // W + tail) * 4
+        coll = ring * (cp * 4 + vbytes + n_partitions * 4)
+        host = (gw(cp // W) + tail) * 4
     return {"host_bytes": host, "collective_bytes": coll,
             "total_bytes": host + coll}
 
@@ -262,7 +306,7 @@ def _level_program(mmesh: MiningMesh, minsup: int,
                    backend: Backend, reduce: str, max_embeddings: int,
                    survivor_cap: int, rebalance: bool, threshold: float,
                    donate: bool, child_width: Optional[int],
-                   sharded: bool):
+                   sharded: bool, packed: bool = False):
     """Build (and cache per static config) the jitted level program.
 
     The true candidate count is a TRACED argument (``c_real``), not part
@@ -274,13 +318,21 @@ def _level_program(mmesh: MiningMesh, minsup: int,
     (each worker's shard carries its C/W support slice; DESIGN.md §11),
     which requires the ``reduce_scatter`` shuffle — the support vector
     is then never all-gathered on device.  The rebalance decision moves
-    inside too, fed by an all-gather of the tiny (NP,) cost vector."""
+    inside too, fed by an all-gather of the tiny (NP,) cost vector.
+
+    With ``packed`` (DESIGN.md §12) the boolean-per-graph support signal
+    travels bit-packed end to end: the fused kernel accumulates verdict
+    bitsets in VMEM (AND+popcount support counting), the reduce_scatter
+    verdict gather ships uint32 bit lanes, and the wire's gsup slice
+    carries two uint16 supports per int32 word (the driver guarantees
+    supports < 2^16 by gating on the DB's graph count).  Every output is
+    bit-identical to the dense program."""
     axes = mmesh.axes
     W = mmesh.n_workers
     parts = mmesh.spec_parts()
     rep = mmesh.replicated()
     fused = is_fused_backend(backend)
-    interpret = backend == "fused_interpret"
+    interpret = backend.endswith("interpret")
     S = survivor_cap
     with_rebalance = rebalance and W > 1
     if sharded and reduce != "reduce_scatter":
@@ -289,8 +341,19 @@ def _level_program(mmesh: MiningMesh, minsup: int,
             f"owns a support slice), got reduce={reduce!r}")
 
     def _pack_wire(gsup, n_keep, overflow, do_reb, imbal, perm):
+        gsup = gsup.astype(jnp.int32)
+        if packed:
+            # two uint16 supports per int32 word (lossless: the driver
+            # only enables packing when every support fits 16 bits);
+            # the checksum below covers the PACKED words — the host
+            # verifies before expanding (reassemble_wire).
+            u = gsup.astype(jnp.uint32)
+            if u.shape[0] % 2:
+                u = jnp.concatenate([u, jnp.zeros((1,), jnp.uint32)])
+            w = u[0::2] | (u[1::2] << jnp.uint32(16))
+            gsup = jax.lax.bitcast_convert_type(w, jnp.int32)
         body = jnp.concatenate([
-            gsup.astype(jnp.int32),
+            gsup,
             jnp.stack([n_keep, overflow, do_reb.astype(jnp.int32),
                        (imbal * _IMBAL_FX).astype(jnp.int32)]),
             perm,
@@ -316,23 +379,33 @@ def _level_program(mmesh: MiningMesh, minsup: int,
     def core(c_real, *args):
         if fused:
             sched_meta, tiles, inv, pol, pmask, src, dst, emask = args
-            sup_pp, emb_s = fused_level_supports(
-                sched_meta, tiles, pol, pmask, src, dst, emask,
-                interpret=interpret)
+            if packed:
+                # verdict accumulator = ceil(G/32) uint32 words in VMEM;
+                # local support counting is AND+popcount per tile_c block
+                sup_pp, emb_s, _vbits = fused_level_supports_packed(
+                    sched_meta, tiles, pol, pmask, src, dst, emask,
+                    interpret=interpret)
+            else:
+                sup_pp, emb_s = fused_level_supports(
+                    sched_meta, tiles, pol, pmask, src, dst, emask,
+                    interpret=interpret)
             local_sup = jnp.take(sup_pp.sum(0), inv)        # (Cp,) canonical
             emb_pp = jnp.take(emb_s, inv, axis=1)           # (PP, Cp)
             meta_can = jnp.take(sched_meta[:, :5], inv, axis=0)
         else:
             meta, pol, pmask, src, dst, emask = args
             local_sup, _, emb_pp = device_local_supports(
-                meta, pol, pmask, src, dst, emask, backend=backend)
+                meta, pol, pmask, src, dst, emask, backend=backend,
+                packed=packed)
             meta_can = meta
 
         # sharded: gsup stays the psum_scatter output — this worker's
         # (Cp/W,) key slice, never all-gathered; only the 1-byte
-        # verdicts travel the ring (the fig19 wire cut made total).
+        # verdicts travel the ring (the fig19 wire cut made total) —
+        # bit lanes instead when packed.
         gsup, verdict = reduce_supports(local_sup, axes, minsup, reduce,
-                                        gather_gsup=not sharded)
+                                        gather_gsup=not sharded,
+                                        packed=packed)
         Cp = verdict.shape[0]
         real = jnp.arange(Cp) < c_real
         keep = (verdict != 0) & real
@@ -440,7 +513,8 @@ def permute_stores(mmesh: MiningMesh, perm: np.ndarray, *arrays):
 
 
 def _fetch_wire(wire_d, level: Optional[int], n_partitions: int,
-                n_shards: int = 1) -> np.ndarray:
+                n_shards: int = 1, packed: bool = False,
+                cp: Optional[int] = None) -> np.ndarray:
     """The ONE device→host transfer of a clean level, integrity-checked.
 
     ``np.array`` (a copy, so jax's cached host value stays pristine even
@@ -454,7 +528,8 @@ def _fetch_wire(wire_d, level: Optional[int], n_partitions: int,
     rather than ever decoding corrupt supports."""
     for _ in range(_WIRE_FETCH_ATTEMPTS):
         host = faults.corrupt_wire(np.array(wire_d), level)
-        body = reassemble_wire(host, n_partitions, n_shards)
+        body = reassemble_wire(host, n_partitions, n_shards,
+                               packed=packed, cp=cp)
         if body is not None:
             return body
     raise faults.WireIntegrityError(
@@ -498,12 +573,13 @@ class PendingLevel:
     n_partitions: int
     n_shards: int              # 1 = dense wire; W = sharded
     level: Optional[int]
+    packed: bool = False       # gsup slices ship 2x uint16 per word
 
     def finish(self) -> LevelOutputs:
         """Block on the wire (the one host sync), verify + decode it."""
         wire = unpack_wire(
             _fetch_wire(self.wire_d, self.level, self.n_partitions,
-                        self.n_shards),
+                        self.n_shards, self.packed, self.Cp),
             self.C_real, self.Cp, self.n_partitions)
         return LevelOutputs(wire, self.pol, self.pmask, self.src,
                             self.dst, self.emask)
@@ -531,6 +607,8 @@ def dispatch_level(
     sched_floor: Optional[int] = None,
     level: Optional[int] = None,
     sharded: bool = False,
+    packed: bool = False,
+    tile_c: Optional[int] = None,
 ) -> PendingLevel:
     """Dispatch one level program WITHOUT the host sync.
 
@@ -545,6 +623,12 @@ def dispatch_level(
     so consecutive levels present one static schedule shape.
     ``sharded`` selects the sharded wire layout (requires
     ``reduce='reduce_scatter'`` and Cp divisible by the worker count).
+    ``packed`` selects the bit-packed support path (DESIGN.md §12) —
+    the caller guarantees supports fit uint16 (total graph count
+    < 2^16).  ``tile_c`` pins the fused schedule's candidate-tile width
+    for the run (None = the adaptive per-call choice); the driver pins
+    it from the level-2 grouping so the kernel grid — and therefore the
+    compiled program — stays constant across levels.
     """
     Cp = meta_p.shape[0]
     n_partitions = pol.shape[0]
@@ -560,24 +644,28 @@ def dispatch_level(
     faults.maybe_raise("kernel", level)
     fn = _level_program(mmesh, minsup, backend, reduce,
                         max_embeddings, survivor_cap, rebalance,
-                        threshold, donate, child_width, sharded)
+                        threshold, donate, child_width, sharded, packed)
     c_real = jnp.asarray(C_real, jnp.int32)
     if is_fused_backend(backend):
+        from ..kernels.fused_level import DEFAULT_TILE_C
         from .buckets import bucket_size
         from .candgen import pad_schedule, schedule_candidates
+        tc = tile_c if tile_c is not None else DEFAULT_TILE_C
         # only the real rows are scheduled (padded candidates would
         # fragment the parent grouping); the row axis is then bucketed
         # with whole invalid tiles and inv parked on one of them.  The
         # bucketed schedule PINS tile_c: the adaptive halving picks a
         # different width per level (a different kernel grid — a
         # recompile); partial-tile waste is bounded by the row bucket
-        # and fully-invalid tiles are skipped inside the kernel.
+        # and fully-invalid tiles are skipped inside the kernel.  The
+        # driver's run-level pin (``tile_c``) replaces the hardwired 8
+        # with the level-2 grouping's adaptive choice.
         if sched_floor is not None:
-            sched = schedule_candidates(np.asarray(meta_p)[:C_real],
+            sched = schedule_candidates(np.asarray(meta_p)[:C_real], tc,
                                         max_inflation=float("inf"))
             rows = bucket_size(sched.meta.shape[0], sched_floor)
         else:
-            sched = schedule_candidates(np.asarray(meta_p)[:C_real])
+            sched = schedule_candidates(np.asarray(meta_p)[:C_real], tc)
             rows = sched.meta.shape[0]
         sched = pad_schedule(sched, rows_to=rows, inv_to=Cp)
         out = fn(c_real, jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
@@ -587,7 +675,7 @@ def dispatch_level(
     wire_d, new_pol, new_pmask = out
     return PendingLevel(wire_d, new_pol, new_pmask, src, dst, emask,
                         C_real, Cp, n_partitions,
-                        W if sharded else 1, level)
+                        W if sharded else 1, level, packed)
 
 
 def run_level(*args, **kwargs) -> LevelOutputs:

@@ -36,8 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..kernels.bitset import pack_bits, unpack_bits
 from ..kernels.ops import (Backend, default_backend, device_local_supports,
-                           fused_level_supports, is_fused_backend)
+                           fused_level_supports, fused_level_supports_packed,
+                           is_fused_backend, is_packed_backend)
 from ..runtime import jax_compat
 from .candgen import schedule_candidates
 from .embedding import materialize_ol, LevelOL
@@ -78,7 +80,7 @@ class MiningMesh:
 
 
 def reduce_supports(local_sup, axes, minsup: int, reduce: str, *,
-                    gather_gsup: bool = False):
+                    gather_gsup: bool = False, packed: bool = False):
     """The shuffle: dense-key aggregation of (C,) local supports.
 
     With ``gather_gsup`` the support counts are all-gathered alongside
@@ -86,6 +88,13 @@ def reduce_supports(local_sup, axes, minsup: int, reduce: str, *,
     program needs the full vector on every device to pack the wire;
     the legacy two-program driver leaves them sharded (the host
     reassembles lazily when reading the output array).
+
+    With ``packed`` the reduce_scatter verdict exchange ships bit-packed
+    lanes (DESIGN.md §12): each worker packs its C/W verdict shard into
+    ``ceil(C/W/32)`` uint32 words, the all-gather moves words instead of
+    int8 lanes (8x smaller payload), and each shard unpacks ragged
+    (masking pad bits past its C/W tail) before concatenation — the
+    returned verdict vector is bit-identical to the dense exchange.
     """
     if reduce == "psum":
         gsup = jax.lax.psum(local_sup, axes)                      # (C,)
@@ -98,8 +107,16 @@ def reduce_supports(local_sup, axes, minsup: int, reduce: str, *,
         # (4+1)·(W-1)/W bytes vs psum's 8·(W-1)/W.
         gsup = jax.lax.psum_scatter(
             local_sup, axes, scatter_dimension=0, tiled=True)      # (C/W,)
-        v_shard = (gsup >= minsup).astype(jnp.int8)
-        verdict = jax.lax.all_gather(v_shard, axes, axis=0, tiled=True)
+        if packed:
+            cs = gsup.shape[0]
+            words = pack_bits(gsup >= minsup)              # (ceil(cs/32),)
+            gathered = jax.lax.all_gather(
+                words, axes, axis=0, tiled=True)           # (W·ww,)
+            shards = gathered.reshape(-1, words.shape[0])  # (W, ww)
+            verdict = unpack_bits(shards, cs).reshape(-1).astype(jnp.int8)
+        else:
+            v_shard = (gsup >= minsup).astype(jnp.int8)
+            verdict = jax.lax.all_gather(v_shard, axes, axis=0, tiled=True)
         if gather_gsup:
             gsup = jax.lax.all_gather(gsup, axes, axis=0, tiled=True)
     else:
@@ -142,12 +159,18 @@ def _support_program_fused(mmesh: MiningMesh, minsup: int,
     axes = mmesh.axes
     parts = mmesh.spec_parts()
     rep = mmesh.replicated()
-    interpret = backend == "fused_interpret"
+    interpret = backend.endswith("interpret")
+    packed = is_packed_backend(backend)
 
     def program(sched_meta, tiles, inv, pol, pmask, src, dst, emask):
-        sup_pp, emb_pp_s = fused_level_supports(
-            sched_meta, tiles, pol, pmask, src, dst, emask,
-            interpret=interpret)                    # (PP, Cs) scheduled
+        if packed:
+            sup_pp, emb_pp_s, _vbits = fused_level_supports_packed(
+                sched_meta, tiles, pol, pmask, src, dst, emask,
+                interpret=interpret)                # (PP, Cs) scheduled
+        else:
+            sup_pp, emb_pp_s = fused_level_supports(
+                sched_meta, tiles, pol, pmask, src, dst, emask,
+                interpret=interpret)                # (PP, Cs) scheduled
         local_sup = jnp.take(sup_pp.sum(0), inv)    # (C,) canonical
         emb_pp = jnp.take(emb_pp_s, inv, axis=1)    # (PP, C) canonical
         gsup, verdict = reduce_supports(local_sup, axes, minsup, reduce)

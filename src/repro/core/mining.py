@@ -47,13 +47,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.ops import Backend, default_backend
+from ..kernels.ops import Backend, default_backend, is_fused_backend
 from ..runtime import checkpoint as ckpt
 from ..runtime import faults
 from ..runtime.sharding import partition_sharding
 from .buckets import BucketSpec, bucket_size, round_up_multiple
 from .candgen import (Candidate, EdgeAlphabet, filter_speculative,
-                      generate_candidates)
+                      generate_candidates, schedule_candidates)
 from .dfscode import Code, array_to_code, code_to_array
 from .embedding import build_edge_ol, candidate_meta, level1_ol
 from .graphdb import Graph
@@ -131,6 +131,13 @@ class MirageConfig:
     # C/W support slice.  None = auto (on whenever the reduce_scatter
     # shuffle runs under single_sync — the slice already lives there)
     sharded_wire: Optional[bool] = None
+    # bit-packed support path (DESIGN.md §12): verdict bitsets in VMEM
+    # with AND+popcount support counting, bit-lane verdict gathers, and
+    # a 2x-uint16 gsup wire slice.  None = auto (on for single_sync);
+    # the legacy pipeline stays dense — it is the differential oracle.
+    # Regardless of the flag, packing engages only when every support
+    # fits uint16 (total graph count < 2^16)
+    packed_support: Optional[bool] = None
     # double-buffer host candidate generation for level k+1 in the
     # shadow of level k's in-flight device program (DESIGN.md §11)
     overlap_candgen: bool = True
@@ -177,6 +184,10 @@ class MirageConfig:
         if self.reduce not in ("psum", "reduce_scatter"):
             raise ValueError(f"reduce={self.reduce!r} must be 'psum' or "
                              f"'reduce_scatter'")
+        if self.packed_support and self.pipeline != "single_sync":
+            raise ValueError(
+                "packed_support=True requires pipeline='single_sync' — the "
+                "legacy pipeline stays dense as the differential oracle")
 
 
 @dataclasses.dataclass
@@ -193,6 +204,8 @@ class LevelStats:
     # host candgen seconds for the NEXT level, spent in the shadow of
     # this level's in-flight device program (0.0 when not overlapped)
     candgen_seconds: float = 0.0
+    survivor_cap: int = 0               # S the level program compacted into
+    retried: bool = False               # level took a materialize-only retry
 
 
 @dataclasses.dataclass
@@ -232,6 +245,7 @@ class _LevelOutcome:
     map_seconds: float
     escalations: int
     retried: bool = False       # level took a materialize-only retry
+    survivor_cap: int = 0       # S the level program was dispatched with
     # candidates for the NEXT level, speculatively generated from ALL of
     # this level's candidates while the device program was in flight;
     # the driver narrows them to the surviving parents (None = not
@@ -365,9 +379,17 @@ class Mirage:
         # checkpoints always store the OL store in CANONICAL order so a
         # resumed run (which rebuilds edge-OLs canonically) stays aligned
         order = np.arange(n_parts)
-        # survivor-ratio history drives the next level's compaction cap
+        # per-level (n_parents, n_candidates, n_keep) history drives the
+        # next level's compaction cap from the measured per-parent fanout
         # (single-sync pipeline); empty = no history yet
-        ratios: list[float] = []
+        history: list[tuple[int, int, int]] = []
+        # bit-packed support path: the 2x-uint16 wire slice needs every
+        # global support to fit uint16 — supports are bounded by |G|
+        packed = self._packed_support(part.n_graphs)
+        # fused tile_c, pinned ONCE per run from the level-2 candidate
+        # grouping: per-level adaptive widths would reshape the tile
+        # schedule (and recompile the level program) every level
+        tile_pin: Optional[int] = None
         # donation re-arming: a resumed run already has a rebuildable
         # checkpoint; a fresh run earns one at its first _save
         policy = DonationPolicy(
@@ -398,6 +420,7 @@ class Mirage:
                 break
             # chaos hook: a scheduled worker death at this level
             faults.maybe_raise("level_start", k + 1)
+            n_parents = len(levels[-1])
             meta = candidate_meta(cands, eol0)
             C = meta.shape[0]
             Cp = (bk.candidates(C, self.mesh.n_workers) if bk is not None
@@ -415,11 +438,19 @@ class Mirage:
                 # child still fits, so the arena shape repeats
                 child_width = (bk.vertex_slots(k + 2, int(pol.shape[-1]))
                                if bk is not None else None)
+                if (tile_pin is None and bk is not None
+                        and is_fused_backend(cfg.backend)):
+                    # level 2 is the widest, most parent-diverse grouping
+                    # the run will see — its adaptive choice generalizes;
+                    # later levels reuse it so the schedule shapes (and
+                    # the compiled level program) stay fixed
+                    tile_pin = schedule_candidates(meta).tile_c
                 try:
                     out = self._level_single_sync(
                         meta_p, meta, C, pol, pmask, src_d, dst_d, emask_d,
-                        minsup, M, ratios, child_width,
+                        minsup, M, history, child_width,
                         level=k + 1, policy=policy,
+                        packed=packed, tile_c=tile_pin,
                         cands=cands, alphabet=alphabet,
                         cand_rate=cand_rate,
                         spec_window=max(prev_dev,
@@ -445,7 +476,9 @@ class Mirage:
                 stats.append(LevelStats(k + 1, C, 0, out.overflow,
                                         time.perf_counter() - t0,
                                         out.map_seconds, False, out.imbalance,
-                                        out.escalations, out.candgen_seconds))
+                                        out.escalations, out.candgen_seconds,
+                                        survivor_cap=out.survivor_cap,
+                                        retried=out.retried))
                 break
 
             pol, pmask = out.pol, out.pmask
@@ -455,13 +488,15 @@ class Mirage:
                 supports[cands[i].code] = int(out.gsup[i])
             if out.perm is not None:
                 order = order[out.perm]
-            ratios.append(len(out.keep) / C)
+            history.append((n_parents, C, len(out.keep)))
 
             stats.append(LevelStats(k + 1, C, len(out.keep), out.overflow,
                                     time.perf_counter() - t0,
                                     out.map_seconds, out.rebalanced,
                                     out.imbalance, out.escalations,
-                                    out.candgen_seconds))
+                                    out.candgen_seconds,
+                                    survivor_cap=out.survivor_cap,
+                                    retried=out.retried))
 
             if cfg.checkpoint_dir:
                 self._save(cfg.checkpoint_dir, k + 1, levels, supports,
@@ -523,6 +558,21 @@ class Mirage:
         return cfg.reduce == "reduce_scatter"
 
     # ------------------------------------------------------------------
+    def _packed_support(self, n_graphs: int) -> bool:
+        """Resolve the packed-support tri-state: explicit config wins
+        (True was validated against the legacy pipeline at construction);
+        auto means default-ON for the single-sync pipeline.  Either way
+        packing additionally requires every global support to fit uint16
+        (the wire ships 2 supports per uint32 word) — supports are
+        bounded by the database's graph count, checked here."""
+        cfg = self.cfg
+        if cfg.pipeline != "single_sync":
+            return False
+        on = (cfg.packed_support if cfg.packed_support is not None
+              else True)
+        return bool(on) and n_graphs < (1 << 16)
+
+    # ------------------------------------------------------------------
     def _buckets(self) -> Optional[BucketSpec]:
         """The run's shape-bucket family, or None when bucketing is off.
         The legacy pipeline never buckets — it is the PR-1 differential
@@ -534,15 +584,23 @@ class Mirage:
                           cfg.bucket_k_floor)
 
     # ------------------------------------------------------------------
-    def _survivor_cap(self, C: int, Cp: int, ratios: list[float]) -> int:
+    def _survivor_cap(self, C: int, Cp: int,
+                      history: list[tuple[int, int, int]]) -> int:
         """Static survivor cap for the level program's compaction stage.
 
         Cap padding slots are cond-gated on device (they execute a
         constant fill, not a materialization), so the cap only governs
         the child store's HBM footprint; a miss costs one
         materialize-only retry dispatch (the pass-1 supports stay
-        valid).  Policy: slack × the worst recent survival ratio, or a
-        quarter of the candidate space when there is no history yet.
+        valid).  Policy: predict the next survivor count from the
+        previous level's measured per-parent fanout —
+        ``keep_prev / parents_prev`` survivors per parent times the
+        ``keep_prev`` parents this level mines from, scaled by the
+        configured slack — or a quarter of the candidate space when
+        there is no history yet.  (The earlier survival-RATIO predictor
+        multiplied by the CURRENT candidate count C, which balloons with
+        the parent set and over-padded the arena by the fanout squared
+        on expanding runs.)
 
         Under shape bucketing the prediction is rounded to the S-bucket
         family and clamped at the (bucketed) Cp ceiling: a cap miss
@@ -556,25 +614,29 @@ class Mirage:
             # >= C keeps the arena in the same shape family as the
             # parent axis instead of jumping to the C family.
             return Cp if bk is None else bk.survivors(C, Cp)
-        if not ratios:
+        if not history:
             s = min(Cp, max(32, -(-Cp // 4)))
         else:
-            r = max(ratios[-2:])
-            s = min(Cp, max(1, int(np.ceil(
-                self.cfg.survivor_slack * r * C)) + 16))
+            parents_prev, _cands_prev, keep_prev = history[-1]
+            fanout = keep_prev / max(parents_prev, 1)
+            pred = self.cfg.survivor_slack * fanout * max(keep_prev, 1)
+            # n_keep <= C always, so C is a sound extra clamp
+            s = min(Cp, C, max(1, int(np.ceil(pred)) + 16))
         if bk is not None:
             s = bk.survivors(s, Cp)
         return s
 
     def _level_single_sync(self, meta_p, meta, C, pol, pmask, src, dst,
-                           emask, minsup, M, ratios,
+                           emask, minsup, M, history,
                            child_width: Optional[int] = None, *,
                            level: Optional[int] = None,
                            policy: Optional[DonationPolicy] = None,
                            cands: Optional[list[Candidate]] = None,
                            alphabet: Optional[EdgeAlphabet] = None,
                            cand_rate: Optional[float] = None,
-                           spec_window: Optional[float] = None
+                           spec_window: Optional[float] = None,
+                           packed: bool = False,
+                           tile_c: Optional[int] = None
                            ) -> _LevelOutcome:
         """One level through the device-resident program: a single
         dispatch and a single device→host sync on the wire vector.
@@ -603,7 +665,7 @@ class Mirage:
         bk = self._buckets()
         Cp = meta_p.shape[0]
         backend = cfg.backend or default_backend()
-        S = self._survivor_cap(C, Cp, ratios)
+        S = self._survivor_cap(C, Cp, history)
         # chaos hook: a cap-miss storm forces a pathological cap, driving
         # every hit level through the materialize-only retry path
         S = faults.override_cap(S, level)
@@ -622,7 +684,8 @@ class Mirage:
             donate=donated,
             child_width=child_width,
             sched_floor=bk.c_floor if bk is not None else None,
-            level=level, sharded=self._sharded_wire())
+            level=level, sharded=self._sharded_wire(),
+            packed=packed, tile_c=tile_c)
         # the overlap window: the device program is in flight, the host
         # is free — speculate the next level's candidates now
         spec_cands = None
@@ -690,7 +753,7 @@ class Mirage:
             rebalanced=w.rebalanced and n > 0, imbalance=w.imbalance,
             perm=w.perm if (w.rebalanced and n > 0) else None,
             map_seconds=map_secs, escalations=escalations,
-            retried=retried, spec_cands=spec_cands,
+            retried=retried, survivor_cap=S, spec_cands=spec_cands,
             candgen_seconds=cand_secs)
 
     # ------------------------------------------------------------------

@@ -52,7 +52,7 @@ def filter_infrequent_edges(
         for k, ((u, v), el) in enumerate(zip(g.edges, g.elabels)):
             t = (int(g.vlabels[u]), int(el), int(g.vlabels[v]))
             keep[k] = t in alphabet
-        out.append(g.drop_edges(keep))
+        out.append(g.keep_edges(keep))
     return out, alphabet
 
 
@@ -81,7 +81,7 @@ def make_partitions(
     n = len(graphs)
     if n:
         # the load boundary: user input is validated HERE, before any
-        # filtering (drop_edges legitimately empties graphs later).
+        # filtering (keep_edges legitimately empties graphs later).
         # An empty database stays exempt per the contract above.
         validate_db(graphs)
     if n_partitions < 1:

@@ -1,0 +1,154 @@
+"""Bit-packed graph bitsets: pack/unpack, lane-AND/OR, SWAR popcount.
+
+The map phase's hot signal is boolean-per-graph — "does candidate c have
+at least one embedding in graph g?" (MIRAGE §III-C).  Carrying it as
+int32 lanes wastes 32x the HBM traffic and shuffle payload it needs;
+DIMSpan (arXiv 1703.01910) shows bit-level compression of exactly this
+state is what keeps distributed FSM in-memory and network-light.
+
+Layout contract (DESIGN.md §12):
+
+* a length-``n`` bit vector packs to ``ceil(n / 32)`` ``uint32`` words,
+* bit ``i`` lives in word ``i // 32`` at position ``i % 32`` (LSB-first),
+* pad bits beyond ``n`` are ZERO — producers guarantee it, and consumers
+  that cannot (e.g. after a lane-OR with foreign words) re-mask with
+  :func:`tail_mask`.
+
+Every helper dispatches on the input type: jax arrays (including
+tracers, so the helpers inline into Pallas kernels and jitted programs)
+use ``jnp``; anything else uses host numpy.  The same source of truth
+therefore serves the fused kernel, the reduce shuffle, the wire codec,
+and the host-side oracles — which is what makes "packed is bit-identical
+to dense" checkable instead of aspirational.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["WORD", "n_words", "pack_bits", "unpack_bits", "popcount",
+           "tail_mask", "lane_and", "lane_or", "packed_any_count",
+           "support_path_cost_model"]
+
+WORD = 32
+
+Array = Union[np.ndarray, jax.Array]
+
+
+def _xp(x):
+    return jnp if isinstance(x, jax.Array) else np
+
+
+def n_words(n: int) -> int:
+    """Number of uint32 words needed for an ``n``-bit vector."""
+    return -(-int(n) // WORD)
+
+
+def pack_bits(bits: Array, axis: int = -1) -> Array:
+    """Pack a boolean (or 0/1 integer) array into uint32 words.
+
+    The ``axis`` dimension of length ``n`` becomes ``ceil(n / 32)`` words,
+    LSB-first; pad bits are zero.
+    """
+    xp = _xp(bits)
+    b = xp.moveaxis(bits, axis, -1).astype(xp.uint32)
+    n = b.shape[-1]
+    w = n_words(n)
+    pad = w * WORD - n
+    if pad:
+        b = xp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, pad)])
+    b = b.reshape(b.shape[:-1] + (w, WORD))
+    shifts = xp.arange(WORD, dtype=xp.uint32)
+    words = xp.sum(b << shifts, axis=-1, dtype=xp.uint32)
+    return xp.moveaxis(words, -1, axis)
+
+
+def unpack_bits(words: Array, n: int, axis: int = -1) -> Array:
+    """Inverse of :func:`pack_bits`: expand words back to ``n`` bools."""
+    xp = _xp(words)
+    w = xp.moveaxis(words, axis, -1).astype(xp.uint32)
+    shifts = xp.arange(WORD, dtype=xp.uint32)
+    bits = (w[..., None] >> shifts) & xp.uint32(1)
+    bits = bits.reshape(bits.shape[:-2] + (-1,))[..., :n].astype(bool)
+    return xp.moveaxis(bits, -1, axis)
+
+
+def popcount(words: Array) -> Array:
+    """Per-word population count (SWAR), returned as int32."""
+    xp = _xp(words)
+    x = words.astype(xp.uint32)
+    x = x - ((x >> xp.uint32(1)) & xp.uint32(0x55555555))
+    x = (x & xp.uint32(0x33333333)) + ((x >> xp.uint32(2)) & xp.uint32(0x33333333))
+    x = (x + (x >> xp.uint32(4))) & xp.uint32(0x0F0F0F0F)
+    return ((x * xp.uint32(0x01010101)) >> xp.uint32(24)).astype(xp.int32)
+
+
+def tail_mask(n: int, words: Optional[int] = None) -> np.ndarray:
+    """uint32 word vector with bits ``[0, n)`` set and the rest clear.
+
+    ``words`` (>= ``n_words(n)``) pads the mask with all-zero words — the
+    ragged-tail contract for a bit axis padded past ``n``.  Host numpy;
+    pass through ``jnp.asarray`` (free at trace time) for device use.
+    """
+    w = n_words(n) if words is None else int(words)
+    return pack_bits(np.arange(w * WORD, dtype=np.int64) < int(n))
+
+
+def lane_and(a: Array, b: Array) -> Array:
+    """Lane-wise AND of packed words (set intersection)."""
+    return a & b
+
+
+def lane_or(a: Array, b: Array) -> Array:
+    """Lane-wise OR of packed words (set union; re-mask the tail if the
+    operands disagree about pad bits)."""
+    return a | b
+
+
+def packed_any_count(words: Array, n: int, axis: int = -1) -> Array:
+    """Count set bits of an ``n``-bit packed vector along ``axis`` —
+    AND with the ragged-tail mask, popcount, sum.  int32."""
+    xp = _xp(words)
+    mask = tail_mask(n, words=np.shape(words)[axis])
+    if xp is jnp:
+        mask = jnp.asarray(mask)
+    shape = [1] * np.ndim(words)
+    shape[axis] = -1
+    return xp.sum(popcount(words & mask.reshape(shape)), axis=axis,
+                  dtype=xp.int32)
+
+
+def support_path_cost_model(c: int, g: int, n_workers: int, *,
+                            packed: bool) -> dict:
+    """Modeled support-dimension bytes for one mining level.
+
+    Counts the three places the boolean-per-graph signal travels:
+
+    * ``hbm_bytes`` — the (C, G) verdict lanes a dense backend carries as
+      int32 vs ``(C, ceil(G/32))`` uint32 bitset words,
+    * ``collective_bytes`` — the per-worker verdict all-gather after
+      ``reduce_scatter`` thresholding (int8 lanes vs packed words),
+    * ``host_bytes`` — the per-worker gsup wire slice (int32 vs the
+      2x-uint16 packed words of the sharded wire).
+
+    This is the deterministic proxy gated by ``benchmarks/check_packed.py``
+    (measured wall time is meaningless on a 1-core CPU container); the
+    constants mirror ``level_step.wire_cost_model``.
+    """
+    w = max(int(n_workers), 1)
+    ring = (w - 1) / w
+    cs = -(-int(c) // w)
+    if packed:
+        hbm = c * n_words(g) * 4
+        coll = ring * n_words(c) * 4
+        host = -(-cs // 2) * 4
+    else:
+        hbm = c * g * 4
+        coll = ring * c * 1
+        host = cs * 4
+    return {"hbm_bytes": float(hbm), "collective_bytes": float(coll),
+            "host_bytes": float(host),
+            "total_bytes": float(hbm + coll + host)}

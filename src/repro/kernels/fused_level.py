@@ -44,9 +44,56 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_level_pallas", "DEFAULT_TILE_C"]
+from .bitset import WORD, popcount
+
+__all__ = ["fused_level_pallas", "fused_level_packed_pallas",
+           "DEFAULT_TILE_C"]
 
 DEFAULT_TILE_C = 8
+
+
+def _joined_blocks(meta_ref, ct, tile_c, pol, pmask, src, dst, emask):
+    """Yield ``(ok, valid)`` per candidate row of one schedule tile.
+
+    ``ok`` is the (TG, M, F) join-match mask for candidate row
+    ``ct * tile_c + i``; ``valid`` its meta valid flag (int32 scalar).
+    Shared by the dense and packed kernels so the join semantics cannot
+    diverge between the two backends.
+    """
+    tg, m, k = pol.shape
+    f = src.shape[-1]
+
+    kids = jax.lax.broadcasted_iota(jnp.int32, (tg, m, k), 2)
+    pair_ok = (pmask[:, :, None] != 0) & (emask[:, None, :] != 0)
+
+    # forward-edge membership test (new endpoint must not be a parent
+    # vertex) depends only on (pol, dst) — computed ONCE per block and
+    # shared by all tile_c candidates, where the per-candidate grid
+    # paid the O(M·F·K) loop per candidate.  Bucket-padded K slots
+    # hold PAD (-1) and can never match a real endpoint (ids >= 0).
+    def body(kk, acc):
+        col = jax.lax.dynamic_index_in_dim(pol, kk, axis=2,
+                                           keepdims=False)
+        return acc | (dst[:, None, :] == col[:, :, None])
+
+    member = jax.lax.fori_loop(
+        0, k, body, jnp.zeros((tg, m, f), jnp.bool_))
+
+    for i in range(tile_c):
+        row = ct * tile_c + i
+        stub = meta_ref[row, 1]
+        to = meta_ref[row, 2]
+        fwd = meta_ref[row, 3]
+        valid = meta_ref[row, 5]
+
+        stub_vals = jnp.sum(jnp.where(kids == stub, pol, 0),
+                            axis=-1)                           # (TG,M)
+        to_vals = jnp.sum(jnp.where(kids == to, pol, 0),
+                          axis=-1)                             # (TG,M)
+        ok = (src[:, None, :] == stub_vals[:, :, None]) & pair_ok
+        ok &= jnp.where(fwd == 1, ~member,
+                        dst[:, None, :] == to_vals[:, :, None])
+        yield ok, valid
 
 
 def _fused_kernel(meta_ref, tiles_ref, pol_ref, pmask_ref, src_ref, dst_ref,
@@ -74,46 +121,73 @@ def _fused_kernel(meta_ref, tiles_ref, pol_ref, pmask_ref, src_ref, dst_ref,
         src = src_ref[0, 0]      # (TG, F) int32 — block's shared triple
         dst = dst_ref[0, 0]      # (TG, F) int32
         emask = emask_ref[0, 0]  # (TG, F) int8
-        tg, m, k = pol.shape
-        f = src.shape[-1]
-
-        kids = jax.lax.broadcasted_iota(jnp.int32, (tg, m, k), 2)
-        pair_ok = (pmask[:, :, None] != 0) & (emask[:, None, :] != 0)
-
-        # forward-edge membership test (new endpoint must not be a parent
-        # vertex) depends only on (pol, dst) — computed ONCE per block and
-        # shared by all tile_c candidates, where the per-candidate grid
-        # paid the O(M·F·K) loop per candidate.  Bucket-padded K slots
-        # hold PAD (-1) and can never match a real endpoint (ids >= 0).
-        def body(kk, acc):
-            col = jax.lax.dynamic_index_in_dim(pol, kk, axis=2,
-                                               keepdims=False)
-            return acc | (dst[:, None, :] == col[:, :, None])
-
-        member = jax.lax.fori_loop(
-            0, k, body, jnp.zeros((tg, m, f), jnp.bool_))
 
         sups, embs = [], []
-        for i in range(tile_c):
-            row = ct * tile_c + i
-            stub = meta_ref[row, 1]
-            to = meta_ref[row, 2]
-            fwd = meta_ref[row, 3]
-            valid = meta_ref[row, 5]
-
-            stub_vals = jnp.sum(jnp.where(kids == stub, pol, 0),
-                                axis=-1)                           # (TG,M)
-            to_vals = jnp.sum(jnp.where(kids == to, pol, 0),
-                              axis=-1)                             # (TG,M)
-            ok = (src[:, None, :] == stub_vals[:, :, None]) & pair_ok
-            ok &= jnp.where(fwd == 1, ~member,
-                            dst[:, None, :] == to_vals[:, :, None])
+        for ok, valid in _joined_blocks(meta_ref, ct, tile_c, pol, pmask,
+                                        src, dst, emask):
             sups.append(jnp.sum(ok.any(axis=(1, 2)).astype(jnp.int32))
                         * valid)
             embs.append(ok.sum(dtype=jnp.int32) * valid)
 
         sup_ref[0] += jnp.stack(sups)
         emb_ref[0] += jnp.stack(embs)
+
+
+def _fused_packed_kernel(meta_ref, tiles_ref, gmask_ref, pol_ref, pmask_ref,
+                         src_ref, dst_ref, emask_ref, sup_ref, emb_ref,
+                         vbits_ref, *, tile_c):
+    """Packed twin of ``_fused_kernel`` (DESIGN.md §12).
+
+    The per-graph verdict accumulator is a ``ceil(TG/32)``-word uint32
+    bitset in VMEM: each candidate's (TG,) any-match vector packs to
+    words, lane-ANDs with the valid-graph mask ``gmask`` (ragged G%32
+    tail + partition padding), and local support is popcount per
+    ``tile_c`` block.  The packed verdict words are also written out
+    (``vbits``) so downstream consumers get bitset-shaped support masks
+    without re-deriving them.
+    """
+    ct = pl.program_id(1)
+    g = pl.program_id(2)
+
+    @pl.when(g == 0)
+    def _init():
+        sup_ref[...] = jnp.zeros_like(sup_ref)
+        emb_ref[...] = jnp.zeros_like(emb_ref)
+
+    # Unlike sup/emb, each vbits block is visited exactly once per
+    # (pp, ct, g) step — zero it unconditionally so tiles skipped by the
+    # all-invalid fast path below don't leak whatever HBM held before.
+    vbits_ref[...] = jnp.zeros_like(vbits_ref)
+
+    tile_valid = meta_ref[ct * tile_c, 5]
+    for i in range(1, tile_c):
+        tile_valid = tile_valid | meta_ref[ct * tile_c + i, 5]
+
+    @pl.when(tile_valid != 0)
+    def _compute():
+        pol = pol_ref[0, 0]      # (TG, M, K) int32
+        pmask = pmask_ref[0, 0]  # (TG, M) int8
+        src = src_ref[0, 0]      # (TG, F) int32
+        dst = dst_ref[0, 0]      # (TG, F) int32
+        emask = emask_ref[0, 0]  # (TG, F) int8
+        gmask = gmask_ref[...]   # (TGW,) uint32 — valid-graph bit lanes
+        tg = pol.shape[0]
+        tgw = tg // WORD
+
+        verdicts, embs = [], []
+        for ok, valid in _joined_blocks(meta_ref, ct, tile_c, pol, pmask,
+                                        src, dst, emask):
+            verdicts.append(ok.any(axis=(1, 2)) & (valid != 0))   # (TG,)
+            embs.append(ok.sum(dtype=jnp.int32) * valid)
+
+        bits = jnp.stack(verdicts).reshape(tile_c, tgw, WORD)
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (tile_c, tgw, WORD), 2)
+        words = jnp.sum(bits.astype(jnp.uint32) << shifts, axis=-1,
+                        dtype=jnp.uint32)                      # (TC, TGW)
+        words = words & gmask[None, :]                         # lane-AND
+        sup_ref[0] += jnp.sum(popcount(words), axis=-1)        # popcount
+        emb_ref[0] += jnp.stack(embs)
+        vbits_ref[0] = words
 
 
 @functools.partial(jax.jit, static_argnames=("tile_g", "interpret"))
@@ -183,3 +257,89 @@ def fused_level_pallas(
         interpret=interpret,
     )(sched_meta, tiles, pol, pmask, src, dst, emask)
     return sup, emb
+
+
+@functools.partial(jax.jit, static_argnames=("tile_g", "interpret"))
+def fused_level_packed_pallas(
+    sched_meta: jnp.ndarray,   # (Cs, 6) int32, Cs = NT * tile_c
+    tiles: jnp.ndarray,        # (NT, 2) int32
+    gmask: jnp.ndarray,        # (G/32,) uint32 — valid-graph bit lanes
+    pol: jnp.ndarray,          # (PP, P, G, M, K) int32
+    pmask: jnp.ndarray,        # (PP, P, G, M) int8/bool
+    src: jnp.ndarray,          # (PP, T, G, F) int32
+    dst: jnp.ndarray,          # (PP, T, G, F) int32
+    emask: jnp.ndarray,        # (PP, T, G, F) int8/bool
+    *,
+    tile_g: int,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Packed single-launch level supports (DESIGN.md §12).
+
+    Same grid and feeding contract as :func:`fused_level_pallas`, with
+    ``tile_g`` additionally a multiple of 32 so every graph tile packs to
+    whole uint32 words.  Returns ``(sup, emb, vbits)`` where
+    ``vbits (PP, Cs, G/32) uint32`` carries per-candidate per-graph
+    verdict bitsets in scheduled order — ``sup`` is exactly
+    ``popcount(vbits)`` summed over words, computed in VMEM.
+    """
+    Cs = sched_meta.shape[0]
+    NT = tiles.shape[0]
+    tile_c = Cs // NT
+    if Cs != NT * tile_c:
+        raise ValueError(f"Cs={Cs} not a multiple of NT={NT}")
+    PP, P, G, M, K = pol.shape
+    _, T, _, F = src.shape
+    if tile_g % WORD:
+        raise ValueError(f"tile_g={tile_g} not a multiple of {WORD}")
+    if G % tile_g:
+        raise ValueError(f"G={G} not a multiple of tile_g={tile_g}")
+    n_g = G // tile_g
+    tgw = tile_g // WORD
+    if gmask.shape != (G // WORD,):
+        raise ValueError(f"gmask shape {gmask.shape} != ({G // WORD},)")
+
+    pmask = pmask.astype(jnp.int8)
+    emask = emask.astype(jnp.int8)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(PP, NT, n_g),
+        in_specs=[
+            pl.BlockSpec((tgw,),
+                         lambda pp, ct, g, meta, tiles: (g,)),
+            pl.BlockSpec((1, 1, tile_g, M, K),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 0],
+                                                         g, 0, 0)),
+            pl.BlockSpec((1, 1, tile_g, M),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 0],
+                                                         g, 0)),
+            pl.BlockSpec((1, 1, tile_g, F),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 1],
+                                                         g, 0)),
+            pl.BlockSpec((1, 1, tile_g, F),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 1],
+                                                         g, 0)),
+            pl.BlockSpec((1, 1, tile_g, F),
+                         lambda pp, ct, g, meta, tiles: (pp, tiles[ct, 1],
+                                                         g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_c),
+                         lambda pp, ct, g, meta, tiles: (pp, ct)),
+            pl.BlockSpec((1, tile_c),
+                         lambda pp, ct, g, meta, tiles: (pp, ct)),
+            pl.BlockSpec((1, tile_c, tgw),
+                         lambda pp, ct, g, meta, tiles: (pp, ct, g)),
+        ],
+    )
+    sup, emb, vbits = pl.pallas_call(
+        functools.partial(_fused_packed_kernel, tile_c=tile_c),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((PP, Cs), jnp.int32),
+            jax.ShapeDtypeStruct((PP, Cs), jnp.int32),
+            jax.ShapeDtypeStruct((PP, Cs, G // WORD), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(sched_meta, tiles, gmask, pol, pmask, src, dst, emask)
+    return sup, emb, vbits

@@ -6,6 +6,11 @@
                     path (join + per-candidate reduction in one kernel,
                     parent-grouped candidate schedule; DESIGN.md §5-6)
   "fused_interpret" the fused kernel in interpret mode — CPU validation
+  "fused_packed"    the fused kernel with bit-packed verdict bitsets —
+                    the per-graph accumulator is ceil(G/32) uint32 words
+                    in VMEM and support counting is AND+popcount
+                    (DESIGN.md §12); bit-identical to "fused"
+  "fused_packed_interpret"  the packed kernel in interpret mode
   "pallas"          legacy two-launch Pallas pipeline (join kernel, (C,G)
                     HBM intermediates, then reduce kernel) — kept as the
                     on-device oracle/fallback for the fused path
@@ -24,15 +29,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .bitset import WORD, n_words, tail_mask
 from .embedding_join import DEFAULT_TILE_G, embedding_join_pallas
-from .fused_level import DEFAULT_TILE_C, fused_level_pallas
+from .fused_level import (DEFAULT_TILE_C, fused_level_packed_pallas,
+                          fused_level_pallas)
 from .ref import embedding_join_ref, support_count_ref
 from .support_count import support_count_pallas
 
-Backend = Literal["ref", "pallas", "interpret", "fused", "fused_interpret"]
+Backend = Literal["ref", "pallas", "interpret", "fused", "fused_interpret",
+                  "fused_packed", "fused_packed_interpret"]
 
-__all__ = ["level_supports", "fused_level_supports", "device_local_supports",
-           "default_backend", "is_fused_backend"]
+__all__ = ["level_supports", "fused_level_supports",
+           "fused_level_supports_packed", "device_local_supports",
+           "default_backend", "is_fused_backend", "is_packed_backend"]
 
 
 def default_backend() -> Backend:
@@ -40,7 +49,13 @@ def default_backend() -> Backend:
 
 
 def is_fused_backend(backend: Backend | None) -> bool:
-    return (backend or default_backend()) in ("fused", "fused_interpret")
+    return (backend or default_backend()) in (
+        "fused", "fused_interpret", "fused_packed", "fused_packed_interpret")
+
+
+def is_packed_backend(backend: Backend | None) -> bool:
+    return (backend or default_backend()) in (
+        "fused_packed", "fused_packed_interpret")
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
@@ -83,6 +98,43 @@ def fused_level_supports(
                               emaskp, tile_g=tg, interpret=interpret)
 
 
+def fused_level_supports_packed(
+    sched_meta: jnp.ndarray,   # (Cs, 6) int32 — schedule_candidates output
+    tiles: jnp.ndarray,        # (NT, 2) int32 block descriptors
+    pol: jnp.ndarray,          # (PP, P, G, M, K) int32
+    pmask: jnp.ndarray,        # (PP, P, G, M) bool/int8
+    src: jnp.ndarray,          # (PP, T, G, F) int32
+    dst: jnp.ndarray,
+    emask: jnp.ndarray,
+    *,
+    tile_g: int = DEFAULT_TILE_G,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Packed twin of :func:`fused_level_supports` (DESIGN.md §12).
+
+    Owns the 32-aligned graph-axis padding and builds the valid-graph
+    bit mask: tile_g rounds to a multiple of 32 so graph tiles pack to
+    whole uint32 words, and ``gmask`` zeroes the ragged padded-G tail
+    (padded graphs also carry zero masks — the lane-AND is the second
+    line of defence that makes the bitset contract local).  Returns
+    ``(sup, emb, vbits)`` in scheduled order; ``vbits`` is the
+    per-candidate per-graph verdict bitset, ``(PP, Cs, ceil(G/32))``
+    uint32 with the pad-bit tail zero.
+    """
+    G = pol.shape[2]
+    tg = min(_round_up(tile_g, WORD), _round_up(G, WORD))
+    polp = _pad_to(pol, 2, tg, value=-1)
+    pmaskp = _pad_to(pmask.astype(jnp.int8), 2, tg)
+    srcp = _pad_to(src, 2, tg, value=-1)
+    dstp = _pad_to(dst, 2, tg, value=-1)
+    emaskp = _pad_to(emask.astype(jnp.int8), 2, tg)
+    Gp = polp.shape[2]
+    gmask = jnp.asarray(tail_mask(G, words=n_words(Gp)))
+    return fused_level_packed_pallas(sched_meta, tiles, gmask, polp, pmaskp,
+                                     srcp, dstp, emaskp, tile_g=tg,
+                                     interpret=interpret)
+
+
 def device_local_supports(
     meta: jnp.ndarray,     # (C, 5) int32 — replicated candidate metadata
     pol: jnp.ndarray,      # (PP, P, G, M, K) — device-local partitions
@@ -92,13 +144,29 @@ def device_local_supports(
     emask: jnp.ndarray,
     *,
     backend: Backend | None = None,
+    packed: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Map phase on one device: the per-candidate join vmapped over the
     device-local partition stack.  Returns the summed (C,) local support
     and embed count plus the per-partition (PP, C) embed counts (the
     straggler-rebalance cost signal).  Non-fused backends only — the
     fused kernel covers the partition axis in its own grid
-    (``fused_level_supports``)."""
+    (``fused_level_supports``).
+
+    ``packed=True`` routes the "ref" backend through the bitset-shaped
+    oracle (``embedding.support_bits_ref``: per-graph verdicts pack to
+    uint32 words, support = AND+popcount) — bit-identical by
+    construction, so the packed pipeline stays exercised on CPU where
+    the default backend is "ref".  The two-launch Pallas backends stay
+    dense (they are the oracle for the fused path)."""
+    if packed and (backend or default_backend()) == "ref":
+        from ..core.embedding import support_bits_ref
+
+        sup_pp, emb_pp = jax.vmap(
+            lambda a, b, c, d, e: support_bits_ref(
+                meta, a, b, c, d, e)[:2]
+        )(pol, pmask, src, dst, emask)
+        return sup_pp.sum(0), emb_pp.sum(0), emb_pp
     sup_pp, emb_pp = jax.vmap(
         lambda a, b, c, d, e: level_supports(
             meta, a, b, c, d, e, backend=backend)
@@ -135,13 +203,20 @@ def level_supports(
         matched, count = embedding_join_ref(meta, pol, pmask, src, dst, emask)
         return support_count_ref(matched, count)
 
-    if backend in ("fused", "fused_interpret"):
+    if is_fused_backend(backend):
         from ..core.candgen import schedule_candidates
         sched = schedule_candidates(np.asarray(meta), tile_c)
-        sup, emb = fused_level_supports(
-            jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
-            pol[None], pmask[None], src[None], dst[None], emask[None],
-            tile_g=tile_g, interpret=(backend == "fused_interpret"))
+        interpret = backend.endswith("interpret")
+        if is_packed_backend(backend):
+            sup, emb, _ = fused_level_supports_packed(
+                jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
+                pol[None], pmask[None], src[None], dst[None], emask[None],
+                tile_g=tile_g, interpret=interpret)
+        else:
+            sup, emb = fused_level_supports(
+                jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
+                pol[None], pmask[None], src[None], dst[None], emask[None],
+                tile_g=tile_g, interpret=interpret)
         inv = jnp.asarray(sched.inv)
         return jnp.take(sup[0], inv), jnp.take(emb[0], inv)
 

@@ -5,7 +5,8 @@ Design goals, per the 1000+-node brief:
   * **Atomic**: write to ``<dir>/.tmp.<step>`` then rename — a killed
     writer never corrupts the latest checkpoint.
   * **Self-describing**: a JSON skeleton mirrors the pytree structure;
-    leaves live in one compressed ``.npz``.  No pickle anywhere.
+    leaves live in one compressed ``.npz`` (bool leaves bit-packed at
+    rest, logical shape in the skeleton).  No pickle anywhere.
   * **Integrity-checked**: the manifest records a SHA-256 digest per
     leaf; ``load_pytree`` verifies every leaf on read and raises
     :class:`~repro.runtime.faults.CheckpointIntegrityError` on any
@@ -63,7 +64,17 @@ def _encode(tree: Any, leaves: list[np.ndarray]) -> Any:
         return {"__seq__": "tuple" if isinstance(tree, tuple) else "list",
                 "items": [_encode(v, leaves) for v in tree]}
     if isinstance(tree, (np.ndarray, jax.Array)):
-        leaves.append(np.asarray(tree))
+        a = np.asarray(tree)
+        if a.dtype == np.bool_:
+            # bool leaves (the OL masks dominate mining checkpoints) are
+            # stored bit-packed — 8x smaller at rest, and the digest is
+            # taken over the packed bytes, i.e. over what is actually on
+            # disk.  The logical shape rides in the skeleton; _decode
+            # re-expands, so packed-at-rest is invisible to callers and
+            # a run may save packed and resume dense (or vice versa).
+            leaves.append(np.packbits(a.reshape(-1)))
+            return {_LEAF: len(leaves) - 1, "__packed_bool__": list(a.shape)}
+        leaves.append(a)
         return {_LEAF: len(leaves) - 1}
     if tree is None or isinstance(tree, (bool, int, float, str)):
         return {"__val__": tree}
@@ -75,7 +86,12 @@ def _encode(tree: Any, leaves: list[np.ndarray]) -> Any:
 def _decode(node: Any, leaves: dict[str, np.ndarray]) -> Any:
     if isinstance(node, dict):
         if _LEAF in node:
-            return leaves[f"a{node[_LEAF]}"]
+            a = leaves[f"a{node[_LEAF]}"]
+            shape = node.get("__packed_bool__")
+            if shape is not None:
+                n = int(np.prod(shape, dtype=np.int64))
+                a = np.unpackbits(a, count=n).astype(bool).reshape(shape)
+            return a
         if "__val__" in node:
             return node["__val__"]
         if "__seq__" in node:

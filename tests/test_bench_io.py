@@ -1,0 +1,59 @@
+"""Bench-harness artifact I/O: a corrupt BENCH_*.json trajectory file
+must never be silently destroyed by the merge-and-rewrite in
+``benchmarks.run`` (ISSUE-8 bugfix) — it is backed up to ``<path>.bad``
+and the run starts a fresh artifact, loudly."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.run import load_existing, parse_row  # noqa: E402
+
+
+def test_truncated_json_backed_up_not_destroyed(tmp_path, capsys):
+    p = tmp_path / "BENCH_kernels.json"
+    truncated = '{"kernels/fused_level,C=64": {"us_per_call": 12.5, "der'
+    p.write_text(truncated)
+
+    out = load_existing(str(p))
+
+    assert out == {}
+    bad = tmp_path / "BENCH_kernels.json.bad"
+    assert bad.exists(), "corrupt artifact must be preserved as .bad"
+    assert bad.read_text() == truncated, "backup must keep original bytes"
+    assert not p.exists(), "the corrupt file was moved, not copied"
+    assert "WARNING" in capsys.readouterr().err
+
+
+def test_valid_json_parses_and_leaves_file_alone(tmp_path):
+    p = tmp_path / "BENCH_kernels.json"
+    rows = {"kernels/x": {"us_per_call": 1.0, "derived": "n=2"}}
+    p.write_text(json.dumps(rows))
+    assert load_existing(str(p)) == rows
+    assert p.exists()
+    assert not (tmp_path / "BENCH_kernels.json.bad").exists()
+
+
+def test_empty_file_is_fresh_start_without_backup(tmp_path):
+    """The writability probe (`open(path, 'a')`) creates empty files —
+    an empty artifact is a fresh start, not corruption to back up."""
+    p = tmp_path / "BENCH_kernels.json"
+    p.write_text("")
+    assert load_existing(str(p)) == {}
+    assert not (tmp_path / "BENCH_kernels.json.bad").exists()
+    p.write_text("   \n")
+    assert load_existing(str(p)) == {}
+    assert not (tmp_path / "BENCH_kernels.json.bad").exists()
+
+
+def test_missing_file_is_fresh_start(tmp_path):
+    assert load_existing(str(tmp_path / "nope.json")) == {}
+
+
+def test_parse_row_splits_from_the_right():
+    name, rec = parse_row("kernels/fused,C=64,12.5,n=2;m=3")
+    assert name == "kernels/fused,C=64"
+    assert rec == {"us_per_call": 12.5, "derived": "n=2;m=3"}

@@ -151,6 +151,37 @@ def test_bucketed_wire_supports_match_legacy(monkeypatch):
         assert gsup.shape[0] == st.n_candidates  # unpack slices padding off
 
 
+def test_fused_tile_c_pinned_per_run(monkeypatch):
+    """ISSUE-8: the bucketed fused dispatch used to hardwire tile_c=8
+    regardless of the run's parent grouping.  The driver now picks the
+    tile width ONCE, from the level-2 grouping's adaptive choice, and
+    dispatches every level with it — so (a) all per-level schedules
+    agree on tile_c, (b) the pin is the adaptive choice, and (c) the
+    pin adds no level-program compiles (the <=3 contract holds)."""
+    from repro.core import candgen
+
+    widths = []
+    orig = candgen.schedule_candidates
+
+    def spy(meta, *a, **kw):
+        sched = orig(meta, *a, **kw)
+        widths.append(sched.tile_c)
+        return sched
+
+    monkeypatch.setattr(candgen, "schedule_candidates", spy)
+    monkeypatch.setattr(mining, "schedule_candidates", spy)
+    res, tr = _mine(True, monkeypatch, backend="fused_interpret")
+    assert len(res.stats) >= 6
+    assert widths, "fused dispatches must build schedules"
+    # the FIRST call is the driver's pin computation (adaptive, meta
+    # only); every later call is a dispatch passing the pin through —
+    # one distinct width means pin == the adaptive level-2 choice
+    assert len(set(widths)) == 1, (
+        f"tile_c must be pinned for the run, saw {sorted(set(widths))}")
+    assert tr.n_compiles <= 3, (
+        f"the tile_c pin must not add compiles, saw {tr.n_compiles}")
+
+
 def test_fused_schedule_bucketing_matches_ref(monkeypatch):
     """The fused backend's bucketed schedule (invalid pad tiles, parked
     inverse permutation) must agree with the ref backend compile-for-

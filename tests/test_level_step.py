@@ -147,32 +147,71 @@ def test_survivor_cap_rounds_to_bucket_family():
     """Bucketed cap predictions must land in the floor·2^i family,
     clamp at the (bucketed) Cp ceiling, and — the anti-thrash
     property — map near-boundary predictions to ONE bucket instead of
-    flipping the compiled program between adjacent raw caps."""
+    flipping the compiled program between adjacent raw caps.
+
+    History entries are (n_parents, n_candidates, n_keep) of the
+    previous level; the cap predicts from the measured per-parent
+    fanout."""
     cfg = MirageConfig(minsup=2, n_partitions=1, bucket_shapes=True,
                        bucket_s_floor=8, bucket_c_floor=16)
     m = Mirage(cfg)
+    raw_miner = Mirage(MirageConfig(minsup=2, n_partitions=1,
+                                    bucket_shapes=False))
     Cp, C = 64, 60
     family = {8, 16, 32, 64}
     assert m._survivor_cap(C, Cp, []) in family
-    for r in (0.01, 0.2, 0.35, 0.6, 0.99):
-        s = m._survivor_cap(C, Cp, [r])
-        assert s in family, (r, s)
+    for keep_prev in (1, 5, 12, 25, 40, 59):
+        hist = [(10, 60, keep_prev)]
+        s = m._survivor_cap(C, Cp, hist)
+        assert s in family, (keep_prev, s)
         assert s <= Cp
         # never below the unbucketed prediction (a cap that can hold
         # fewer survivors than predicted would guarantee retries)
-        raw = Mirage(MirageConfig(minsup=2, n_partitions=1,
-                                  bucket_shapes=False))._survivor_cap(
-                                      C, Cp, [r])
-        assert s >= min(raw, Cp), (r, s, raw)
-    # two near-boundary ratios whose RAW caps differ must share a bucket
-    raw_a = Mirage(MirageConfig(minsup=2, n_partitions=1,
-                                bucket_shapes=False))._survivor_cap(
-                                    C, Cp, [0.30])
-    raw_b = Mirage(MirageConfig(minsup=2, n_partitions=1,
-                                bucket_shapes=False))._survivor_cap(
-                                    C, Cp, [0.33])
+        raw = raw_miner._survivor_cap(C, Cp, hist)
+        assert s >= min(raw, Cp), (keep_prev, s, raw)
+    # two near-boundary histories whose RAW caps differ must share a
+    # bucket
+    raw_a = raw_miner._survivor_cap(C, Cp, [(10, 60, 11)])
+    raw_b = raw_miner._survivor_cap(C, Cp, [(10, 60, 12)])
     assert raw_a != raw_b
-    assert m._survivor_cap(C, Cp, [0.30]) == m._survivor_cap(C, Cp, [0.33])
+    assert (m._survivor_cap(C, Cp, [(10, 60, 11)])
+            == m._survivor_cap(C, Cp, [(10, 60, 12)]))
+
+
+def test_survivor_cap_tightens_from_fanout_without_retries():
+    """ISSUE-8 regression: the cap must predict from the previous
+    level's per-parent FANOUT, not the survival ratio times the current
+    (ballooning) candidate count — on a deep expanding run the old
+    formula over-padded the child arena while the fanout predictor
+    tightens it, and tightening must not buy extra materialize-only
+    retries (escalations are ruled out by a roomy M)."""
+    graphs = random_db(20, n_vertices=8, extra_edge_prob=0.5,
+                       n_vlabels=2, n_elabels=1, seed=7)
+    cfg = MirageConfig(minsup=6, n_partitions=1, max_size=5,
+                       max_embeddings=64, bucket_shapes=False)
+    res = Mirage(cfg).fit(graphs)
+    deep = [s for s in res.stats if s.level >= 3]
+    assert deep, "run must mine at least one level with cap history"
+    assert not any(s.retried for s in res.stats), \
+        "the tightened cap must not force materialize-only retries"
+    # replay the pre-fix formula (slack x worst recent survival ratio
+    # x C) over the run's own history and compare the caps it would
+    # have dispatched with
+    slack = cfg.survivor_slack
+    ratios: list[float] = []
+    tighter = 0
+    for s in res.stats:
+        if ratios:
+            r = max(ratios[-2:])
+            old = min(s.n_candidates,
+                      max(1, int(np.ceil(slack * r * s.n_candidates)) + 16))
+            assert s.survivor_cap <= old, (s.level, s.survivor_cap, old)
+            if s.survivor_cap < old:
+                tighter += 1
+            # the cap still covered the real survivors (no miss)
+            assert s.n_frequent <= s.survivor_cap
+        ratios.append(s.n_frequent / s.n_candidates)
+    assert tighter >= 1, "fanout predictor never tightened the cap"
 
 
 def test_bucketed_cap_miss_retry_stays_in_family(monkeypatch):
