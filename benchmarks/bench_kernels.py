@@ -165,6 +165,7 @@ def run():
     yield from _bench_packed()
     yield from _bench_bucketing()
     yield from _bench_recovery()
+    yield from _bench_device_loop()
 
 
 def _bench_packed():
@@ -310,3 +311,57 @@ def _bench_recovery():
               f"replayed_from_ckpt=1;events={len(sup_f.events)}")
     yield row("kernels/recovery_overhead", 0.0,
               f"overhead=x{faulted / max(clean, 1e-9):.2f}")
+
+
+def _bench_device_loop():
+    """Whole-run device residency (DESIGN.md §13): warm per-level
+    driver time and MEASURED device→host transfer counts, the
+    lax.while_loop run program vs the per-level single-sync driver on
+    the same DB.  Interpret-mode CPU wall time mostly reflects kernel
+    compute, so the structural claim this row tracks is the transfer
+    ledger (one fetch per RUN vs one per LEVEL); the timing ratio is
+    recorded for the trajectory, not gated."""
+    import time
+
+    import jax._src.array as _jarr
+
+    from repro.core.graphdb import random_db
+    from repro.core.mining import Mirage, MirageConfig
+
+    graphs = random_db(18, n_vertices=6, extra_edge_prob=0.35,
+                       n_vlabels=3, n_elabels=2, seed=42)
+
+    def mine(pipeline):
+        cfg = MirageConfig(minsup=3, n_partitions=2, max_size=4,
+                           backend="ref", pipeline=pipeline)
+        m = Mirage(cfg)
+        counts = {"n": 0}
+        orig = _jarr.ArrayImpl._value
+
+        def counting(self):
+            counts["n"] += 1
+            return orig.fget(self)
+
+        _jarr.ArrayImpl._value = property(counting)
+        t0 = time.perf_counter()
+        try:
+            res = m.fit(graphs)
+        finally:
+            _jarr.ArrayImpl._value = orig
+        return res, time.perf_counter() - t0, counts["n"]
+
+    out = {}
+    for pipeline in ("single_sync", "device_loop"):
+        mine(pipeline)                          # warm the jit caches
+        out[pipeline] = mine(pipeline)
+    res_ss, secs_ss, n_ss = out["single_sync"]
+    res_dl, secs_dl, n_dl = out["device_loop"]
+    assert sorted(res_dl.supports.items()) == sorted(
+        res_ss.supports.items())
+    assert n_dl == 1, f"device_loop fetched {n_dl} times"
+    n_levels = len(res_ss.stats)
+    yield row("kernels/device_loop_per_level", secs_dl / n_levels,
+              f"single_sync_us={secs_ss / n_levels * 1e6:.0f}"
+              f";speedup=x{secs_ss / secs_dl:.2f}"
+              f";transfers_run={n_dl};transfers_single_sync={n_ss}"
+              f";levels={n_levels}")

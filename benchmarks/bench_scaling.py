@@ -39,6 +39,11 @@ layout (see benchmarks/check_scaling.py).
 ``BENCH_SCALING_WORKERS`` (comma-separated, default "1,2,4,8") limits
 the worker counts — CI runs "1,2".
 
+``fig18/device_loop_w{1,2}`` compares the whole-run device-resident
+loop (DESIGN.md §13) against single_sync on the same run: warm wall
+time plus the MEASURED device→host transfer counts (one per run vs one
+per level), counted at jax's ArrayImpl fetch point.
+
 The pipeline row measures steady-state (jit-warm) per-level wall time:
 each pipeline mines the same database twice in-process and the second
 run's mean level time is reported — level shapes recur across runs, so
@@ -120,6 +125,52 @@ PIPELINE_SNIPPET = textwrap.dedent("""
 """)
 
 
+DEVICE_LOOP_SNIPPET = textwrap.dedent("""
+    import os, sys, json, time
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + sys.argv[1])
+    import jax
+    import jax._src.array as _jarr
+    from repro.core.graphdb import pubchem_like_db
+    from repro.core.mapreduce import MiningMesh
+    from repro.core.mining import Mirage, MirageConfig
+    from repro.runtime import jax_compat
+
+    w = int(sys.argv[1])
+    mesh = MiningMesh(jax_compat.make_mesh((w,), ("data",)))
+    graphs = pubchem_like_db(160, seed=0, avg_edges=11)
+
+    def fit(pipeline):
+        cfg = MirageConfig(minsup=0.20, n_partitions=%(NP)d, max_size=4,
+                           pipeline=pipeline)
+        m = Mirage(cfg, mesh)
+        counts = {"n": 0}
+        orig = _jarr.ArrayImpl._value
+        def counting(self):
+            counts["n"] += 1
+            return orig.fget(self)
+        _jarr.ArrayImpl._value = property(counting)
+        t0 = time.perf_counter()
+        try:
+            res = m.fit(graphs)
+        finally:
+            _jarr.ArrayImpl._value = orig
+        return res, time.perf_counter() - t0, counts["n"], m
+
+    out = {"w": w}
+    for pipeline in ("single_sync", "device_loop"):
+        fit(pipeline)                        # cold run: compiles
+        res, secs, fetches, m = fit(pipeline)
+        out[pipeline] = {"secs": secs, "fetches": fetches,
+                         "levels": len(res.stats),
+                         "frequent": sum(res.counts())}
+        if pipeline == "device_loop":
+            assert m.last_device_loop["completed"], m.last_device_loop
+    assert out["single_sync"]["frequent"] == out["device_loop"]["frequent"]
+    print(json.dumps(out))
+""") % {"NP": N_PARTITIONS}
+
+
 def _modeled_total(levels: list[dict], w: int) -> float:
     """Critical-path model over one run's warm per-level timings (see
     module docstring): max(t_dev/W, t_cand) + t_other per level."""
@@ -194,6 +245,25 @@ def run() -> list[str]:
             f";model=critical_path;overlap_hidden_s={hidden:.3f}"
             f";frequent={d['frequent']}"))
         out.extend(_wire_rows(base["levels"], w))
+
+    # whole-run device residency (DESIGN.md §13): warm wall time plus
+    # MEASURED device→host transfer counts, device_loop vs single_sync
+    # on the same run — the per-run vs per-level transfer ledger
+    for w in [x for x in workers if x <= 2]:
+        r = subprocess.run([sys.executable, "-c", DEVICE_LOOP_SNIPPET,
+                            str(w)],
+                           capture_output=True, text=True, env=env,
+                           timeout=1800)
+        assert r.returncode == 0, r.stderr[-1500:]
+        d = json.loads(r.stdout.strip().splitlines()[-1])
+        ss, dl = d["single_sync"], d["device_loop"]
+        out.append(row(
+            f"fig18/device_loop_w{w}", dl["secs"],
+            f"single_sync_us={ss['secs'] * 1e6:.0f}"
+            f";speedup={ss['secs'] / dl['secs']:.2f}x"
+            f";transfers_run={dl['fetches']}"
+            f";transfers_single_sync={ss['fetches']}"
+            f";levels={ss['levels']};frequent={ss['frequent']}"))
 
     if os.environ.get("BENCH_SCALING_SKIP_PIPELINE"):
         return out

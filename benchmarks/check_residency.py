@@ -1,0 +1,108 @@
+"""CI gate for whole-run device residency (DESIGN.md §13).
+
+    PYTHONPATH=src python -m benchmarks.check_residency
+
+Wall time is too noisy to gate on, so the gate counts the DETERMINISTIC
+quantity the device_loop pipeline exists to minimize: device→host
+transfers per mining run, measured at jax's ``ArrayImpl._value`` fetch
+point (the same tracer tests/test_compile_cache.py uses).  Three
+invariants on the same DB:
+
+  1. the single_sync baseline fetches once per mined level (the PR-2
+     wire contract) — this is the per-LEVEL floor device_loop removes;
+  2. a checkpoint-free device_loop run fetches exactly ONCE — the
+     end-of-run wire; nothing else crosses the boundary;
+  3. a chunked run (``device_loop_ckpt_every=1``) stays within the
+     ``ChunkCadence`` budget: one wire fetch per chunk plus two store
+     fetches per checkpoint saved (``max_fetches() + 2`` with the
+     final-state save).
+
+All three runs must agree with the host oracle bit-for-bit — a fetch
+count only counts if the mining stayed exact.  Run under
+``JAX_LOG_COMPILES=1`` in CI so the compile log rides along as an
+artifact next to the fetch counts.
+"""
+import sys
+import tempfile
+
+import jax._src.array as _jarr
+
+sys.path.insert(0, "src")  # noqa: E402 — runnable as a script too
+
+from repro.core.graphdb import random_db            # noqa: E402
+from repro.core.host_miner import mine_host          # noqa: E402
+from repro.core.mining import Mirage, MirageConfig   # noqa: E402
+from repro.runtime.checkpoint import ChunkCadence    # noqa: E402
+
+
+def count_fetches(cfg, graphs):
+    """Mine under ``cfg`` counting every ArrayImpl materialization."""
+    miner = Mirage(cfg)
+    counts = {"n": 0}
+    orig = _jarr.ArrayImpl._value
+
+    def counting(self):
+        counts["n"] += 1
+        return orig.fget(self)
+
+    _jarr.ArrayImpl._value = property(counting)
+    try:
+        res = miner.fit(graphs)
+    finally:
+        _jarr.ArrayImpl._value = orig
+    return res, counts["n"], miner
+
+
+def main() -> None:
+    graphs = random_db(18, n_vertices=6, extra_edge_prob=0.35,
+                       n_vlabels=3, n_elabels=2, seed=42)
+    ref = mine_host(graphs, 3, max_size=4)
+    canon = sorted((c, i.support) for c, i in ref.frequent.items())
+    base = dict(minsup=3, n_partitions=2, max_size=4, backend="ref")
+
+    failures = []
+
+    def check(tag, res, cond, detail):
+        if sorted(res.supports.items()) != canon:
+            failures.append(f"{tag}: supports diverge from the host "
+                            f"oracle")
+        if not cond:
+            failures.append(f"{tag}: {detail}")
+
+    # 1. per-level baseline: single_sync fetches the wire once per level
+    res_ss, n_ss, _ = count_fetches(MirageConfig(**base), graphs)
+    levels = len(res_ss.stats)
+    check("single_sync", res_ss, n_ss == levels,
+          f"{n_ss} fetches for {levels} levels (expected one per level)")
+
+    # 2. the residency contract: one fetch for the WHOLE run
+    res_dl, n_dl, m = count_fetches(
+        MirageConfig(pipeline="device_loop", **base), graphs)
+    check("device_loop", res_dl,
+          m.last_device_loop["completed"] and n_dl == 1,
+          f"{n_dl} fetches for the whole run (contract: exactly 1)")
+
+    # 3. chunked checkpoints stay inside the cadence budget
+    cadence = ChunkCadence(1, base["max_size"], 1)
+    budget = cadence.max_fetches() + 2   # + final-state save
+    with tempfile.TemporaryDirectory() as ckdir:
+        res_ck, n_ck, m_ck = count_fetches(
+            MirageConfig(pipeline="device_loop", device_loop_ckpt_every=1,
+                         checkpoint_dir=ckdir, **base), graphs)
+    check("device_loop+ckpt", res_ck,
+          m_ck.last_device_loop["completed"] and n_ck <= budget,
+          f"{n_ck} fetches exceed the {cadence.n_chunks}-chunk budget "
+          f"of {budget}")
+
+    if failures:
+        for f_ in failures:
+            print(f"RESIDENCY GATE FAIL: {f_}", file=sys.stderr)
+        sys.exit(1)
+    print(f"residency gate OK: single_sync={n_ss} fetches "
+          f"({levels} levels), device_loop=1 fetch/run, "
+          f"chunked={n_ck} fetches within the {budget} budget "
+          f"({cadence.n_chunks} chunks)")
+
+
+if __name__ == "__main__":
+    main()

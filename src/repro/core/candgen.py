@@ -22,15 +22,21 @@ lists.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterable, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from .dfscode import Code, Edge5, code_to_graph, is_canonical, rightmost_path
+from .dfscode import (Code, Edge5, code_to_graph, is_canonical,
+                      rightmost_path, code_array_rightmost_path,
+                      code_array_vertex_labels, min_dfs_canonical_array)
 
 __all__ = ["Extension", "Candidate", "EdgeAlphabet", "generate_candidates",
            "filter_speculative", "CandidateSchedule", "schedule_candidates",
-           "pad_schedule"]
+           "pad_schedule", "device_candidates", "device_schedule",
+           "device_candgen_jit", "candidates_from_arrays"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -292,3 +298,220 @@ def _pad_schedule(sched: np.ndarray, tiles: np.ndarray, inv: np.ndarray,
         inv = np.concatenate(
             [inv, np.full(pad_inv_to - inv.shape[0], park, np.int32)])
     return sched, tiles, inv
+
+
+# ---------------------------------------------------------------------------
+# Device-side candidate generation + schedule (pipeline="device_loop",
+# DESIGN.md §13) — `generate_candidates` and `schedule_candidates` recast
+# as fixed-shape jnp programs so the level loop can stay on device.
+# ---------------------------------------------------------------------------
+
+def _compact_mask(mask, cap: int):
+    """Prefix-sum compact a flat bool mask into ``cap`` index slots.
+
+    Returns (idx (cap,) int32 — flat indices of the first ``cap`` set
+    entries in order, 0-filled past ``n``; n; overflow)."""
+    pos = jnp.cumsum(mask) - 1
+    n = mask.sum()
+    dest = jnp.where(mask, pos, cap)
+    idx = jnp.zeros((cap,), jnp.int32).at[dest].set(
+        jnp.arange(mask.shape[0], dtype=jnp.int32), mode="drop")
+    return idx, n.astype(jnp.int32), n > cap
+
+
+def _parent_slots(code, pvalid, triples, n_vertex_slots: int):
+    """All structural extension slots of one parent code (pre-canonicality).
+
+    Slot order matches `generate_candidates` exactly: back-edge slots
+    (RMP ancestors root-first × alphabet rows) then forward slots (RMP
+    vertices root-first × alphabet rows); the triples table is the sorted
+    directed closure of the alphabet, so masking rows on the stub label
+    leaves the same sorted ``partners`` subsequence the host iterates.
+
+    Returns (ok (SLOTS,), edge (SLOTS, 5), meta (SLOTS, 4) [stub, to,
+    fwd, triple]) with SLOTS = (2·NV − 1)·T.
+    """
+    NV = n_vertex_slots
+    L = code.shape[0]
+    T = triples.shape[0]
+    valid_e = code[:, 0] >= 0
+    ne = valid_e.sum()
+    vl = code_array_vertex_labels(code, NV)
+    rmp, rmp_len, n_v = code_array_rightmost_path(code, NV)
+    rmv = n_v - 1
+    umin = jnp.minimum(code[:, 0], code[:, 1])
+    umax = jnp.maximum(code[:, 0], code[:, 1])
+
+    ta, te, tb = triples[:, 0], triples[:, 1], triples[:, 2]
+    l_rmv = vl[jnp.clip(rmv, 0, NV - 1)]
+
+    # ---- back-edge slots: (w_pos, t) for w_pos in [0, NV-2]
+    wb = rmp[:NV - 1]                                     # (NV-1,)
+    lb = vl[jnp.clip(wb, 0, NV - 1)]
+    edge_dup = (valid_e[None, :] & (umin[None, :] == wb[:, None])
+                & (umax[None, :] == rmv)).any(axis=1)     # (NV-1,)
+    okb = ((jnp.arange(NV - 1) < rmp_len - 1)[:, None]
+           & pvalid & (ne < L)
+           & (ta[None, :] == l_rmv) & (tb[None, :] == lb[:, None])
+           & ~edge_dup[:, None])                          # (NV-1, T)
+    bi = jnp.broadcast_to(rmv, (NV - 1, T))
+    bj = jnp.broadcast_to(wb[:, None], (NV - 1, T))
+    b_edge = jnp.stack([bi, bj,
+                        jnp.broadcast_to(ta[None, :], (NV - 1, T)),
+                        jnp.broadcast_to(te[None, :], (NV - 1, T)),
+                        jnp.broadcast_to(tb[None, :], (NV - 1, T))], axis=-1)
+    b_meta = jnp.stack([bi, bj, jnp.zeros((NV - 1, T), jnp.int32),
+                        jnp.broadcast_to(jnp.arange(T)[None, :],
+                                         (NV - 1, T))], axis=-1)
+
+    # ---- forward slots: (w_pos, t) for w_pos in [0, NV-1]
+    wf = rmp                                              # (NV,)
+    lf = vl[jnp.clip(wf, 0, NV - 1)]
+    okf = ((jnp.arange(NV) < rmp_len)[:, None]
+           & pvalid & (ne < L) & (n_v < NV)
+           & (ta[None, :] == lf[:, None]))                # (NV, T)
+    fi = jnp.broadcast_to(wf[:, None], (NV, T))
+    fj = jnp.broadcast_to(n_v, (NV, T))
+    f_edge = jnp.stack([fi, fj,
+                        jnp.broadcast_to(ta[None, :], (NV, T)),
+                        jnp.broadcast_to(te[None, :], (NV, T)),
+                        jnp.broadcast_to(tb[None, :], (NV, T))], axis=-1)
+    f_meta = jnp.stack([fi, fj, jnp.ones((NV, T), jnp.int32),
+                        jnp.broadcast_to(jnp.arange(T)[None, :],
+                                         (NV, T))], axis=-1)
+
+    ok = jnp.concatenate([okb.reshape(-1), okf.reshape(-1)])
+    edge = jnp.concatenate([b_edge.reshape(-1, 5), f_edge.reshape(-1, 5)])
+    meta = jnp.concatenate([b_meta.reshape(-1, 4), f_meta.reshape(-1, 4)])
+    return ok, edge.astype(jnp.int32), meta.astype(jnp.int32)
+
+
+def device_candidates(codes, n_par, triples, *, n_vertex_slots: int,
+                      raw_budget: int, budget: int, max_states: int):
+    """Device twin of `generate_candidates` over array-shaped codes.
+
+    Two-stage compaction keeps the expensive canonicality machine off
+    label-mismatched slots: structural slots are prefix-sum compacted
+    into ``raw_budget`` rows first, `min_dfs_canonical_array` is vmapped
+    only over those, and canonical survivors compact again into
+    ``budget`` rows — parent-major and order-preserving, so row r is
+    EXACTLY the r-th candidate the host generator would emit.
+
+    Returns (meta (budget, 5) [parent, stub, to, fwd, triple] pad rows
+    [0,0,0,1,0]; child_codes (budget, L, 5) -1-padded; n_cand; flags
+    (3,) bool [raw overflow, canonical overflow, state overflow]).
+    """
+    SP, L = codes.shape[0], codes.shape[1]
+    NV = n_vertex_slots
+    pvalid = jnp.arange(SP) < n_par
+    ok, edge, meta4 = jax.vmap(
+        lambda c, pv: _parent_slots(c, pv, triples, NV))(codes, pvalid)
+    SLOTS = ok.shape[1]
+
+    raw_idx, n_raw, raw_ovf = _compact_mask(ok.reshape(-1), raw_budget)
+    raw_real = jnp.arange(raw_budget) < n_raw
+    p_r = raw_idx // SLOTS                                # (CBR,)
+    pcode = codes[p_r]                                    # (CBR, L, 5)
+    e_r = edge.reshape(-1, 5)[raw_idx]
+    m_r = meta4.reshape(-1, 4)[raw_idx]
+    ne_r = (pcode[:, :, 0] >= 0).sum(axis=1)
+    rows = jnp.arange(L)
+    child = jnp.where((rows[None, :, None] == ne_r[:, None, None]),
+                      e_r[:, None, :], pcode)             # (CBR, L, 5)
+
+    canon, st_ovf = jax.vmap(
+        lambda c: min_dfs_canonical_array(
+            c, n_vertex_slots=NV, max_states=max_states))(child)
+
+    can_idx, n_cand, can_ovf = _compact_mask(canon & raw_real, budget)
+    can_real = jnp.arange(budget) < n_cand
+    meta = jnp.where(
+        can_real[:, None],
+        jnp.concatenate([p_r[can_idx, None], m_r[can_idx]], axis=1),
+        jnp.asarray([0, 0, 0, 1, 0], jnp.int32)[None, :])
+    out_codes = jnp.where(can_real[:, None, None], child[can_idx], -1)
+    flags = jnp.stack([raw_ovf, can_ovf, (st_ovf & raw_real).any()])
+    return meta, out_codes, n_cand, flags
+
+
+@functools.lru_cache(maxsize=64)
+def device_candgen_jit(L: int, n_vertex_slots: int, raw_budget: int,
+                       budget: int, max_states: int):
+    """Cached jitted `device_candidates` for the candgen="device"
+    stepping stone (standalone, outside the whole-run loop)."""
+    return jax.jit(functools.partial(
+        device_candidates, n_vertex_slots=n_vertex_slots,
+        raw_budget=raw_budget, budget=budget, max_states=max_states))
+
+
+def candidates_from_arrays(meta: np.ndarray, child_codes: np.ndarray,
+                           n_cand: int,
+                           triples: Sequence[tuple[int, int, int]]
+                           ) -> list[Candidate]:
+    """Rebuild host `Candidate` objects from `device_candidates` output
+    (same candidates, same order — pinned by tests/test_device_loop.py)."""
+    from .dfscode import array_to_code  # local: avoid cycle at import time
+    out = []
+    for r in range(int(n_cand)):
+        p, stub, to, fwd, tri = (int(x) for x in meta[r])
+        a, e, b = triples[tri]
+        out.append(Candidate(array_to_code(child_codes[r]), p,
+                             Extension(bool(fwd), stub, to,
+                                       (int(a), int(e), int(b)))))
+    return out
+
+
+def device_schedule(meta, n_cand, *, tile_c: int, n_triples: int, rows: int):
+    """Device twin of `schedule_candidates` under fixed shapes.
+
+    Stable-sorts candidate slots by (parent, triple), sizes each group's
+    tile-aligned span with a prefix sum, and emits the same
+    (sched_meta, tiles, inv) triple the fused kernel consumes — all jnp,
+    so it runs inside the while_loop body.  ``rows``/``tile_c`` are
+    static; if the tile-padded row count exceeds ``rows`` the overflow
+    flag is set (the driver bails to the host pipeline).  Padding slots
+    of ``inv`` park at row 0 — downstream gathers mask on c_real.
+    """
+    CB = meta.shape[0]
+    tc = tile_c
+    NT = rows // tc
+    BIG = jnp.int32(1 << 30)
+    valid = jnp.arange(CB) < n_cand
+    key = meta[:, 0] * n_triples + meta[:, 4]
+    skey_in = jnp.where(valid, key, BIG)
+    order = jnp.argsort(skey_in)                     # stable
+    skey = skey_in[order]
+    svalid = valid[order]
+
+    first = svalid & ((jnp.arange(CB) == 0) | (skey != jnp.roll(skey, 1)))
+    gid = jnp.cumsum(first) - 1                      # group id per sorted row
+    n_groups = first.sum()
+    gs = jnp.zeros((CB,), jnp.int32).at[
+        jnp.where(svalid, gid, CB)].add(1, mode="drop")
+    tpg = -(-gs // tc)                               # tiles per group
+    padded = tpg * tc
+    goff = jnp.cumsum(padded) - padded               # group start sched row
+    gstart = jnp.cumsum(gs) - gs                     # group start sorted row
+    cg = jnp.clip(gid, 0, CB - 1)
+    srows = goff[cg] + (jnp.arange(CB) - gstart[cg])
+    ovf = padded.sum() > rows
+
+    inv = jnp.zeros((CB,), jnp.int32).at[order].set(
+        jnp.where(svalid, jnp.clip(srows, 0, rows - 1), 0))
+
+    gkeys = jnp.zeros((CB,), jnp.int32).at[
+        jnp.where(first, gid, CB)].set(skey, mode="drop")
+    tend = jnp.cumsum(tpg)
+    tgid = jnp.searchsorted(tend, jnp.arange(NT), side="right")
+    tkey = jnp.where(tgid < n_groups, gkeys[jnp.clip(tgid, 0, CB - 1)], 0)
+    tiles = jnp.stack([tkey // n_triples, tkey % n_triples], axis=1)
+
+    rkey = tkey[jnp.arange(rows) // tc]              # (rows,)
+    zero = jnp.zeros((rows,), jnp.int32)
+    sched = jnp.stack([rkey // n_triples, zero, zero, zero + 1,
+                       rkey % n_triples, zero], axis=1)
+    vals = jnp.concatenate(
+        [meta[order], jnp.ones((CB, 1), jnp.int32)], axis=1)
+    dest = jnp.where(svalid & (srows < rows), srows, rows)
+    sched = sched.at[dest].set(vals, mode="drop")
+    return sched, tiles.astype(jnp.int32), inv, ovf

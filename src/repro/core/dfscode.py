@@ -28,6 +28,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .graphdb import Graph
@@ -47,6 +49,10 @@ __all__ = [
     "rightmost_path",
     "code_to_array",
     "array_to_code",
+    "edge_struct_key",
+    "code_array_vertex_labels",
+    "code_array_rightmost_path",
+    "min_dfs_canonical_array",
 ]
 
 
@@ -263,3 +269,230 @@ def array_to_code(a: np.ndarray) -> Code:
             break
         out.append(tuple(int(x) for x in row))
     return tuple(out)  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# Device-side DFS-code ops (pipeline="device_loop", DESIGN.md §13)
+#
+# The host `edge_lt` / `min_dfs_code` machinery above re-expressed as
+# fixed-shape jnp programs so candidate generation can run inside the
+# whole-run `lax.while_loop`.  Codes travel as (L, 5) int32 arrays,
+# -1 padded (``code_to_array`` layout).
+# ---------------------------------------------------------------------------
+
+_BIG = np.int32(1 << 29)  # lexicographic sentinel (labels/keys are << this)
+
+
+def edge_struct_key(i, j, nv: int):
+    """Linearize `edge_lt`'s structural (i, j) comparison into one int key.
+
+    forward  (i < j): key = (2j)   * (nv+1) + (nv - i)   — orders by (j, -i)
+    backward (i > j): key = (2i+1) * (nv+1) + j          — orders by (i, j)
+
+    The parity of the leading coefficient resolves the mixed cases exactly:
+    backward(i1,·) < forward(·,j2) iff 2·i1+1 < 2·j2 iff i1 < j2, and
+    forward(·,j1) < backward(i2,·) iff 2·j1 < 2·i2+1 iff j1 <= i2 — the
+    four `edge_lt` structural rules.  Label triples break the remaining
+    ties separately (see `min_dfs_canonical_array`'s masked lex-min).
+    """
+    fwd = i < j
+    return jnp.where(fwd, (2 * j) * (nv + 1) + (nv - i),
+                     (2 * i + 1) * (nv + 1) + j).astype(jnp.int32)
+
+
+def _lex_min(mask, comps):
+    """Masked lexicographic min over broadcastable int components.
+
+    Returns ([min components], achiever-mask); mask must have the full
+    broadcast shape."""
+    best = []
+    for c in comps:
+        m = jnp.min(jnp.where(mask, c, _BIG))
+        mask = mask & (c == m)
+        best.append(m)
+    return best, mask
+
+
+def code_array_vertex_labels(code, n_vertex_slots: int):
+    """(L,5) code array -> (NV,) vertex labels, -1 on unused slots."""
+    NV = n_vertex_slots
+    valid = code[:, 0] >= 0
+    vl = jnp.full((NV,), -1, jnp.int32)
+    vl = vl.at[jnp.where(valid, code[:, 0], NV)].set(code[:, 2], mode="drop")
+    vl = vl.at[jnp.where(valid, code[:, 1], NV)].set(code[:, 4], mode="drop")
+    return vl
+
+
+def _dfs_parents(code, n_vertex_slots: int, row_mask):
+    """parent[j] = i over forward rows selected by ``row_mask``."""
+    NV = n_vertex_slots
+    fwd = row_mask & (code[:, 0] < code[:, 1]) & (code[:, 0] >= 0)
+    par = jnp.full((NV,), -1, jnp.int32)
+    return par.at[jnp.where(fwd, code[:, 1], NV)].set(code[:, 0], mode="drop")
+
+
+def code_array_rightmost_path(code, n_vertex_slots: int):
+    """(L,5) code array -> (rmp (NV,) root-first -1-padded, rmp_len, n_v).
+
+    Array twin of `rightmost_path`: walk the forward-edge parent chain
+    from the rightmost (max dfs id) vertex to the root.
+    """
+    NV = n_vertex_slots
+    L = code.shape[0]
+    valid = code[:, 0] >= 0
+    n_v = jnp.max(jnp.where(valid, jnp.maximum(code[:, 0], code[:, 1]), -1)) + 1
+    par = _dfs_parents(code, NV, jnp.ones((L,), bool))
+    rm = n_v - 1
+
+    def up(s, carry):
+        cur, rev = carry
+        rev = rev.at[s].set(cur)
+        nxt = jnp.where(cur > 0, par[jnp.clip(cur, 0, NV - 1)], -1)
+        return nxt, rev
+
+    _, rev = jax.lax.fori_loop(0, NV, up, (rm, jnp.full((NV,), -1, jnp.int32)))
+    rmp_len = (rev >= 0).sum()
+    idx = rmp_len - 1 - jnp.arange(NV)
+    rmp = jnp.where(idx >= 0, rev[jnp.clip(idx, 0, NV - 1)], -1)
+    return rmp, rmp_len, n_v
+
+
+def _onpath_mask(par, rm, n_vertex_slots: int):
+    """(NV,) bool: dfs ids on the rightmost path (root..rm inclusive)."""
+    NV = n_vertex_slots
+    cols = jnp.arange(NV)
+
+    def wstep(s, carry):
+        cur, onp = carry
+        onp = onp | ((cols == cur) & (cur >= 0))
+        return jnp.where(cur > 0, par[jnp.clip(cur, 0, NV - 1)], -1), onp
+
+    _, onpath = jax.lax.fori_loop(0, NV, wstep, (rm, jnp.zeros((NV,), bool)))
+    return onpath
+
+
+def min_dfs_canonical_array(code, *, n_vertex_slots: int, max_states: int):
+    """Array twin of `is_canonical`: (canonical, overflow) bool scalars.
+
+    Runs the breadth-parallel minimal-extension machine of `min_dfs_code`
+    under a fixed state budget: all partial traversals realizing the
+    minimal prefix live in ``max_states`` slots of (graph->dfs, dfs->graph,
+    used-edge-bitmask) arrays.  The dfs-side quantities (vertex count,
+    rightmost path) are shared across states — they are functions of the
+    code prefix alone — so only the graph-side mappings are per-state.
+
+    If the live state set ever exceeds ``max_states`` the result is
+    unreliable and ``overflow`` is set — callers must fall back to the
+    host `is_canonical` (the driver bails the whole device loop).
+    Vmappable over a batch of codes; requires L < 32 (int32 edge bitmask).
+    """
+    L = code.shape[0]
+    NV = n_vertex_slots
+    MS = max_states
+    if L >= 32:
+        raise ValueError(f"max_edges={L} exceeds the int32 edge-bitmask width")
+    ar_l = jnp.arange(L)
+    cols = jnp.arange(NV)
+
+    i_, j_ = code[:, 0], code[:, 1]
+    li_, le_, lj_ = code[:, 2], code[:, 3], code[:, 4]
+    valid_e = i_ >= 0
+    ne = valid_e.sum()
+    vl = code_array_vertex_labels(code, NV)
+
+    # directed orientation table (2L,): first L rows umin->umax, then flipped
+    umin, umax = jnp.minimum(i_, j_), jnp.maximum(i_, j_)
+    du = jnp.concatenate([umin, umax])
+    dv = jnp.concatenate([umax, umin])
+    de = jnp.concatenate([le_, le_])
+    dk = jnp.concatenate([ar_l, ar_l]).astype(jnp.int32)
+    dvalid = jnp.concatenate([valid_e, valid_e])
+    dlu = vl[jnp.clip(du, 0, NV - 1)]
+    dlv = vl[jnp.clip(dv, 0, NV - 1)]
+
+    # --- initial edge: minimal (l_u, l_e, l_v) over valid orientations
+    (b0l, b0e, b0r), m0 = _lex_min(dvalid, (dlu, de, dlv))
+    ok0 = (b0l == li_[0]) & (b0e == le_[0]) & (b0r == lj_[0])
+
+    pos0 = jnp.cumsum(m0) - 1
+    dest0 = jnp.where(m0, pos0, MS)
+    src_o = jnp.zeros((MS,), jnp.int32).at[dest0].set(
+        jnp.arange(2 * L, dtype=jnp.int32), mode="drop")
+    alive = jnp.arange(MS) < m0.sum()
+    su, sv, sk = du[src_o], dv[src_o], dk[src_o]
+    g2d = jnp.where(cols[None, :] == su[:, None], 0,
+                    jnp.where(cols[None, :] == sv[:, None], 1, -1))
+    d2g = jnp.where(cols[None, :] == 0, su[:, None],
+                    jnp.where(cols[None, :] == 1, sv[:, None], -1))
+    used = jnp.where(alive, jnp.int32(1) << sk, 0)
+
+    fwd_rows = valid_e & (i_ < j_)
+
+    def step(t, carry):
+        g2d, d2g, used, alive, result, done, ovf = carry
+        act = (~done) & (t < ne)
+        # shared dfs-space prefix quantities (rows [0, t) are consumed)
+        pre = ar_l < t
+        nmap = 1 + jnp.sum(fwd_rows & pre)
+        rm = nmap - 1
+        par = _dfs_parents(code, NV, pre)
+        onpath = _onpath_mask(par, rm, NV)
+
+        # extension slots: (state, orientation) -> candidate edge
+        fu = g2d[:, jnp.clip(du, 0, NV - 1)]      # (MS, 2L) dfs id of u
+        fv = g2d[:, jnp.clip(dv, 0, NV - 1)]
+        unused = ((used[:, None] >> dk[None, :]) & 1) == 0
+        base = alive[:, None] & dvalid[None, :] & unused
+        is_b = (fu == rm) & (fv >= 0)
+        okb = base & is_b & (fv != rm) & onpath[jnp.clip(fv, 0, NV - 1)]
+        is_f = (fv < 0) & (fu >= 0)
+        okf = base & is_f & onpath[jnp.clip(fu, 0, NV - 1)]
+        okx = okb | okf
+        ei = jnp.where(is_b, rm, fu)
+        ej = jnp.where(is_b, fv, nmap)
+        skey = edge_struct_key(ei, ej, NV)
+
+        shape2 = (MS, 2 * L)
+        (bk_, bl1, bl2, bl3), mbest = _lex_min(
+            okx, (skey,
+                  jnp.broadcast_to(dlu, shape2),
+                  jnp.broadcast_to(de, shape2),
+                  jnp.broadcast_to(dlv, shape2)))
+        bkey_t = edge_struct_key(i_[t], j_[t], NV)
+        match = ((bk_ == bkey_t) & (bl1 == li_[t]) & (bl2 == le_[t])
+                 & (bl3 == lj_[t]) & mbest.any())
+
+        # compact achiever (state, orientation) pairs into the state slots
+        flat = mbest.reshape(-1)
+        posn = jnp.cumsum(flat) - 1
+        nn = flat.sum()
+        dest = jnp.where(flat, posn, MS)
+        sidx = jnp.zeros((MS,), jnp.int32).at[dest].set(
+            jnp.arange(MS * 2 * L, dtype=jnp.int32), mode="drop")
+        s_sel = sidx // (2 * L)
+        o_sel = sidx % (2 * L)
+        isf_sel = okf.reshape(-1)[sidx]
+        gv = dv[jnp.clip(o_sel, 0, 2 * L - 1)]
+        ng2d = jnp.where((cols[None, :] == gv[:, None]) & isf_sel[:, None],
+                         nmap, g2d[s_sel])
+        nd2g = jnp.where((cols[None, :] == nmap) & isf_sel[:, None],
+                         gv[:, None], d2g[s_sel])
+        nused = used[s_sel] | (jnp.int32(1) << dk[jnp.clip(o_sel, 0, 2 * L - 1)])
+        nalive = jnp.arange(MS) < jnp.minimum(nn, MS)
+
+        g2d = jnp.where(act, ng2d, g2d)
+        d2g = jnp.where(act, nd2g, d2g)
+        used = jnp.where(act, nused, used)
+        alive = jnp.where(act, nalive, alive)
+        result = result & jnp.where(act, match, True)
+        done = done | (act & ~match)
+        ovf = ovf | (act & (nn > MS))
+        return g2d, d2g, used, alive, result, done, ovf
+
+    ovf0 = m0.sum() > MS
+    init = (g2d, d2g, used, alive, ok0, ~ok0, ovf0)
+    if L > 1:
+        _, _, _, _, result, _, ovf = jax.lax.fori_loop(1, L, step, init)
+    else:
+        result, ovf = ok0, ovf0
+    return result, ovf

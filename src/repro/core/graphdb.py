@@ -98,16 +98,6 @@ class Graph:
         new_edges = remap[edges] if edges.size else edges
         return Graph(self.vlabels[used], new_edges, elabels)
 
-    def drop_edges(self, keep: np.ndarray) -> "Graph":
-        """Deprecated alias of :meth:`keep_edges`.  Despite the name,
-        the argument has always been a KEEP mask — the rename makes the
-        polarity explicit at call sites."""
-        import warnings
-        warnings.warn("Graph.drop_edges(keep) is deprecated: the mask "
-                      "selects edges to KEEP — use Graph.keep_edges",
-                      DeprecationWarning, stacklevel=2)
-        return self.keep_edges(keep)
-
 
 @dataclasses.dataclass
 class GraphDB:

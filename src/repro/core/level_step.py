@@ -118,11 +118,12 @@ from ..kernels.ops import (Backend, device_local_supports,
                            fused_level_supports_packed, is_fused_backend)
 from ..runtime import faults, jax_compat
 from .embedding import LevelOL, materialize_one
-from .mapreduce import MiningMesh, reduce_supports
+from .mapreduce import MiningMesh, reduce_supports, worker_imbalance
 
 __all__ = ["LevelWire", "LevelOutputs", "PendingLevel", "dispatch_level",
            "run_level", "unpack_wire", "reassemble_wire", "wire_words",
-           "wire_cost_model", "lpt_permutation", "wire_checksum"]
+           "wire_cost_model", "lpt_permutation", "wire_checksum",
+           "fetch_wire"]
 
 _IMBAL_FX = 1 << 16
 
@@ -362,10 +363,7 @@ def _level_program(mmesh: MiningMesh, minsup: int,
 
     def _rebalance(cost):
         NP = cost.shape[0]
-        per_worker = cost.astype(jnp.float32).reshape(W, -1).sum(-1)
-        mean = per_worker.mean()
-        imbal = jnp.where(mean > 0, per_worker.max() / mean,
-                          jnp.float32(1.0))
+        imbal = worker_imbalance(cost, W)
         if with_rebalance:
             do_reb = imbal > threshold
             perm = jnp.where(
@@ -535,6 +533,13 @@ def _fetch_wire(wire_d, level: Optional[int], n_partitions: int,
     raise faults.WireIntegrityError(
         f"level wire failed checksum {_WIRE_FETCH_ATTEMPTS}x"
         + (f" at level {level}" if level is not None else ""))
+
+
+def fetch_wire(wire_d, level: Optional[int] = None) -> np.ndarray:
+    """Fetch + verify a DENSE single-shard wire (trailing §10 checksum
+    word), with the same bounded re-fetch and chaos hook as the level
+    wire.  Used by the device-loop pipeline for its one run wire."""
+    return _fetch_wire(wire_d, level, 0, 1, False, None)
 
 
 def unpack_wire(wire: np.ndarray, C: int, Cp: int, n_partitions: int

@@ -45,7 +45,7 @@ from .candgen import schedule_candidates
 from .embedding import materialize_ol, LevelOL
 
 __all__ = ["MiningMesh", "map_reduce_supports", "map_materialize",
-           "reduce_supports"]
+           "reduce_supports", "worker_imbalance"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +77,16 @@ class MiningMesh:
     @staticmethod
     def single_device() -> "MiningMesh":
         return MiningMesh(jax_compat.make_mesh((1,), ("w",)))
+
+
+def worker_imbalance(cost, n_workers: int):
+    """max/mean per-worker cost under the blocked partition→worker
+    assignment, as a traced jnp scalar (1.0 when the mesh is idle).
+    Shared by the level program's rebalance trigger and the device
+    loop's per-level stats row so the two report identical signals."""
+    per_worker = cost.astype(jnp.float32).reshape(n_workers, -1).sum(-1)
+    mean = per_worker.mean()
+    return jnp.where(mean > 0, per_worker.max() / mean, jnp.float32(1.0))
 
 
 def reduce_supports(local_sup, axes, minsup: int, reduce: str, *,

@@ -15,8 +15,13 @@ Phases:
                        level, on the packed wire vector.  Repeat until no
                        frequent patterns.
 
-Two pipelines (MirageConfig.pipeline):
+Three pipelines (MirageConfig.pipeline):
   "single_sync" — the device-resident level program above (default);
+  "device_loop" — the ENTIRE run as one jitted lax.while_loop program
+                  (core/device_loop.py, DESIGN.md §13): on-device
+                  candidate generation + schedule + level compute, one
+                  device→host transfer per run; bails to single_sync
+                  when a static budget overflows;
   "legacy"      — the PR-1 two-program driver (separate support and
                   materialize dispatches, host keep-list, host-side
                   escalation loop and LPT detour), kept as the
@@ -51,20 +56,23 @@ from ..kernels.ops import Backend, default_backend, is_fused_backend
 from ..runtime import checkpoint as ckpt
 from ..runtime import faults
 from ..runtime.sharding import partition_sharding
+from . import device_loop as dloop
 from .buckets import BucketSpec, bucket_size, round_up_multiple
-from .candgen import (Candidate, EdgeAlphabet, filter_speculative,
+from .candgen import (Candidate, EdgeAlphabet, candidates_from_arrays,
+                      device_candgen_jit, filter_speculative,
                       generate_candidates, schedule_candidates)
 from .dfscode import Code, array_to_code, code_to_array
 from .embedding import build_edge_ol, candidate_meta, level1_ol
 from .graphdb import Graph
-from .level_step import dispatch_level, permute_stores
+from .level_step import _IMBAL_FX, dispatch_level, fetch_wire, permute_stores
 from .mapreduce import MiningMesh, map_materialize, map_reduce_supports
 from .partition import make_partitions
 
 __all__ = ["MirageConfig", "LevelStats", "DistMiningResult", "Mirage",
            "DonationPolicy", "DonationRetryRebuild"]
 
-PIPELINES = ("single_sync", "legacy")
+PIPELINES = ("single_sync", "device_loop", "legacy")
+CANDGENS = ("host", "device")
 
 
 class DonationRetryRebuild(RuntimeError):
@@ -153,7 +161,32 @@ class MirageConfig:
     escalate_on_overflow: bool = True
     rebalance_threshold: float = 1.25   # max/mean partition cost trigger
     rebalance: bool = True
-    pipeline: str = "single_sync"       # "single_sync" | "legacy"
+    pipeline: str = "single_sync"   # "single_sync"|"device_loop"|"legacy"
+    # candidate generation: "host" (the python generator) or "device"
+    # (candgen.device_candidates dispatched per level — the benchable
+    # stepping stone toward device_loop, which always generates on
+    # device INSIDE its while_loop).  Device candgen statically disables
+    # the speculative-overlap machinery; a per-level budget/state
+    # overflow falls back to the host generator for that level only.
+    candgen: str = "host"
+    # ---- device_loop static budgets (DESIGN.md §13) ------------------
+    # canonical candidate budget CB per loop iteration (None = auto:
+    # 4x the host-generated start-level candidate count, bucketed —
+    # candgen typically peaks one or two levels past the start); the raw
+    # structural-slot budget before canonicality filtering (None = auto:
+    # 4x CB); the canonicality machine's bounded state count.  Any
+    # overflow trips a bail flag and the run falls back to single_sync.
+    device_c_budget: Optional[int] = None
+    device_raw_budget: Optional[int] = None
+    device_max_states: int = 64
+    # checkpoint cadence: re-invoke the (single) compiled run program
+    # every k levels, fetching wire + OL store at each boundary for the
+    # canonical checkpoint (None = no mid-run checkpoints — exactly one
+    # device→host transfer for the whole run)
+    device_loop_ckpt_every: Optional[int] = None
+    # > 0: replace the while_loop with this many cond-gated body
+    # applications per program invocation (the unrolled stepping stone)
+    device_loop_unroll: int = 0
     donate: bool = True                 # donate OL buffers when retry-free
     # re-arm donation after this many consecutive clean levels even when
     # a retry is possible, rebuilding parents from checkpoint if the
@@ -175,19 +208,43 @@ class MirageConfig:
         if self.pipeline not in PIPELINES:
             raise ValueError(f"pipeline={self.pipeline!r} must be one of "
                              f"{PIPELINES}")
+        if self.candgen not in CANDGENS:
+            raise ValueError(f"candgen={self.candgen!r} must be one of "
+                             f"{CANDGENS}")
         if self.n_partitions < 1:
             raise ValueError(
                 f"n_partitions={self.n_partitions} must be >= 1")
         if self.reduce is None:
-            self.reduce = ("reduce_scatter" if self.pipeline == "single_sync"
-                           else "psum")
+            self.reduce = ("psum" if self.pipeline == "legacy"
+                           else "reduce_scatter")
         if self.reduce not in ("psum", "reduce_scatter"):
             raise ValueError(f"reduce={self.reduce!r} must be 'psum' or "
                              f"'reduce_scatter'")
-        if self.packed_support and self.pipeline != "single_sync":
+        if self.packed_support and self.pipeline == "legacy":
             raise ValueError(
-                "packed_support=True requires pipeline='single_sync' — the "
-                "legacy pipeline stays dense as the differential oracle")
+                "packed_support=True is unavailable on pipeline='legacy' — "
+                "the legacy pipeline stays dense as the differential oracle")
+        if self.pipeline == "device_loop":
+            if self.max_size is None:
+                raise ValueError(
+                    "pipeline='device_loop' needs a finite max_size — the "
+                    "while_loop carry (codes, OL store, run outputs) is "
+                    "shaped by the run's maximum pattern size")
+            if not self.bucket_shapes:
+                raise ValueError(
+                    "pipeline='device_loop' requires bucket_shapes=True — "
+                    "its static budgets are sized in the bucket families")
+            if not self.escalate_on_overflow:
+                raise ValueError(
+                    "pipeline='device_loop' requires escalate_on_overflow "
+                    "— the loop mines at one uniform M and reruns doubled "
+                    "on overflow, matching only the exact (escalated) "
+                    "host semantics")
+        if self.pipeline == "device_loop" or self.candgen == "device":
+            # device candgen makes host speculation structurally
+            # impossible mid-loop — disable it statically (satellite:
+            # the cost gate is bypassed, no PendingLevel speculation)
+            self.overlap_candgen = False
 
 
 @dataclasses.dataclass
@@ -263,6 +320,10 @@ class Mirage:
                  mesh: Optional[MiningMesh] = None):
         self.cfg = config
         self.mesh = mesh or MiningMesh.single_device()
+        # introspection for the last device-loop run (tests + residency
+        # gate): {"completed": bool, "fallback": Optional[str], ...};
+        # None until a device_loop fit has executed
+        self.last_device_loop: Optional[dict] = None
         if config.n_partitions % self.mesh.n_workers:
             raise ValueError(
                 f"n_partitions={config.n_partitions} must be a multiple of "
@@ -396,6 +457,23 @@ class Mirage:
             cfg.donation_rearm_levels,
             can_rebuild=bool(cfg.checkpoint_dir) and resume_state is not None)
 
+        # ---- device-resident whole-run loop (DESIGN.md §13) ------------
+        if cfg.pipeline == "device_loop" and start_level < cfg.max_size:
+            try:
+                return self._mine_device_loop(
+                    alphabet, minsup, triples, eol0, levels, supports,
+                    pol, pmask, src_d, dst_d, emask_d, packed=packed,
+                    start_k=start_level, total_overflow=total_overflow,
+                    order=order)
+            except dloop.DeviceLoopFallback as bail:
+                # a static budget tripped (or the M valve hit its
+                # ceiling): replay the run through the per-level
+                # pipeline below — it has no static budgets and mines
+                # the identical frequent set (§10 ladder, rung 2)
+                self.last_device_loop = {"completed": False,
+                                         "fallback": str(bail),
+                                         "chunks": 0, "escalations": 0}
+
         # ---- phase 3: iterative mining ---------------------------------
         k = start_level
         # overlapped candgen (DESIGN.md §11): each single-sync level
@@ -410,6 +488,12 @@ class Mirage:
         prev_dev = 0.0
         while cfg.max_size is None or k < cfg.max_size:
             t0 = time.perf_counter()
+            if cands is None and cfg.candgen == "device":
+                # the stepping-stone device candgen: one jitted
+                # device_candidates dispatch instead of the host
+                # generator (None = per-level budget overflow → fall
+                # back to the host generator for this level only)
+                cands = self._device_candgen(levels[-1], triples)
             if cands is None:
                 cands = generate_candidates(levels[-1], alphabet)
                 if levels[-1]:
@@ -549,7 +633,9 @@ class Mirage:
         auto means on whenever the reduce_scatter shuffle runs under the
         single-sync pipeline (the support slice already lives sharded on
         each worker — gathering it just to re-slice host-side is the
-        waste the layout removes)."""
+        waste the layout removes).  The device-loop pipeline never
+        shards: its wire is the ONE replicated run wire (a fallback run
+        through ``_level_single_sync`` then uses the dense layout)."""
         cfg = self.cfg
         if cfg.pipeline != "single_sync":
             return False
@@ -566,7 +652,7 @@ class Mirage:
         (the wire ships 2 supports per uint32 word) — supports are
         bounded by the database's graph count, checked here."""
         cfg = self.cfg
-        if cfg.pipeline != "single_sync":
+        if cfg.pipeline not in ("single_sync", "device_loop"):
             return False
         on = (cfg.packed_support if cfg.packed_support is not None
               else True)
@@ -578,7 +664,8 @@ class Mirage:
         The legacy pipeline never buckets — it is the PR-1 differential
         oracle and must stay bit-identical to it."""
         cfg = self.cfg
-        if not cfg.bucket_shapes or cfg.pipeline != "single_sync":
+        if (not cfg.bucket_shapes
+                or cfg.pipeline not in ("single_sync", "device_loop")):
             return None
         return BucketSpec(cfg.bucket_c_floor, cfg.bucket_s_floor,
                           cfg.bucket_k_floor)
@@ -625,6 +712,221 @@ class Mirage:
         if bk is not None:
             s = bk.survivors(s, Cp)
         return s
+
+    # ------------------------------------------------------------------
+    def _device_candgen(self, parents: list[Code],
+                        triples: list[tuple[int, int, int]]
+                        ) -> Optional[list[Candidate]]:
+        """Per-level device candidate generation (candgen="device"):
+        one jitted ``device_candidates`` dispatch replaces the host
+        generator, returning the SAME candidates in the SAME order
+        (pinned by tests/test_device_loop.py).  Budgets default to the
+        exact structural bound — overflow is then impossible unless the
+        config pins them tighter; any tripped flag returns None and the
+        caller regenerates on host for this level only."""
+        cfg = self.cfg
+        SP = len(parents)
+        if SP == 0:
+            return []
+        Lk = len(parents[0]) + 1            # child edge count
+        NV = Lk + 1                         # child vertex bound
+        T = len(triples)
+        raw_b = cfg.device_raw_budget or SP * (2 * NV - 1) * T
+        budget = cfg.device_c_budget or raw_b
+        fn = device_candgen_jit(Lk, NV, raw_b, budget,
+                                cfg.device_max_states)
+        codes = np.full((SP, Lk, 5), -1, np.int32)
+        for i, c in enumerate(parents):
+            codes[i] = code_to_array(c, Lk)
+        meta, child, n_cand, flags = fn(
+            jnp.asarray(codes), jnp.int32(SP),
+            jnp.asarray(np.asarray(triples, np.int32)))
+        if bool(np.asarray(flags).any()):
+            return None
+        return candidates_from_arrays(np.asarray(meta), np.asarray(child),
+                                      int(n_cand), triples)
+
+    # ------------------------------------------------------------------
+    def _decode_device_run(self, rw: "dloop.RunWire", levels0, supports0,
+                           start_k: int):
+        """Decode a run wire into (levels, supports, stat rows) with the
+        host loop's exact stopping semantics: an empty candidate set
+        stops BEFORE its stats row (the host breaks at the loop head),
+        an empty frequent set stops AFTER it."""
+        levels = [list(l) for l in levels0]
+        sups = dict(supports0)
+        rows: list[tuple[int, int, int, int, float]] = []
+        for s in range(start_k - 1, rw.k_final - 1):
+            n_cand, n_keep, ovf, imb_fx = (int(x) for x in rw.stats[s, :4])
+            if n_cand == 0:
+                break
+            rows.append((s + 2, n_cand, n_keep, ovf, imb_fx / _IMBAL_FX))
+            if n_keep == 0:
+                break
+            lvl = [array_to_code(rw.codes[s, i]) for i in range(n_keep)]
+            levels.append(lvl)
+            for i, c in enumerate(lvl):
+                sups[c] = int(rw.sups[s, i])
+        return levels, sups, rows
+
+    # ------------------------------------------------------------------
+    def _mine_device_loop(self, alphabet, minsup, triples, eol0, levels0,
+                          supports0, pol, pmask, src, dst, emask, *,
+                          packed: bool, start_k: int, total_overflow: int,
+                          order: np.ndarray) -> DistMiningResult:
+        """The whole run as ONE jitted ``lax.while_loop`` program
+        (core/device_loop.py, DESIGN.md §13).
+
+        Candidate generation, schedule, support counting, survivor
+        compaction and child materialization all stay on device for
+        every level; the host sees exactly ONE run-wire transfer (plus
+        wire+store fetches at the optional checkpoint-chunk boundaries).
+        Static budgets are sized once from a single host candidate
+        generation at the start level — the ONLY host candgen of a
+        completed run (pinned by the satellite regression test); a
+        budget overflow mid-run trips a bail flag and this method raises
+        :class:`~.device_loop.DeviceLoopFallback` so the caller replays
+        through the per-level pipeline.
+
+        The exactness valve hoists to run granularity: the loop mines at
+        one uniform embedding cap M (the carry shape); an overflowing
+        run doubles M and reruns the whole program from the base store —
+        pre-overflow levels are bit-identical at the larger M, so the
+        rerun converges to the exact escalated host semantics."""
+        cfg = self.cfg
+        bk = self._buckets()
+        W = self.mesh.n_workers
+        backend = cfg.backend or default_backend()
+        t0 = time.perf_counter()
+        L = cfg.max_size
+        NL = L - 1
+        NV = bk.vertex_slots(L + 1)
+
+        # ---- static budgets from one host generation ------------------
+        base = generate_candidates(levels0[-1], alphabet)
+        if not base:
+            return DistMiningResult(levels0, supports0, [], alphabet,
+                                    minsup, total_overflow)
+        meta0 = candidate_meta(base, eol0)
+        C0 = meta0.shape[0]
+        CB = round_up_multiple(cfg.device_c_budget
+                               or bk.candidates(4 * C0, W), W)
+        CBR = cfg.device_raw_budget or 4 * CB
+        SPP = max(bucket_size(len(levels0[-1]), bk.s_floor), CB)
+        tile_c, ROWS = 1, CB
+        if is_fused_backend(backend):
+            sched0 = schedule_candidates(meta0)
+            tile_c = sched0.tile_c
+            ROWS = round_up_multiple(
+                bucket_size(max(2 * sched0.meta.shape[0], CB), bk.c_floor),
+                tile_c)
+
+        prog = dloop._run_program(
+            self.mesh, minsup, backend, cfg.reduce, packed, L, NV, CB,
+            CBR, cfg.device_max_states, NL, tile_c, ROWS, len(triples),
+            cfg.device_loop_unroll)
+
+        # ---- device-resident carry ------------------------------------
+        trip_a = jnp.asarray(np.asarray(triples, np.int32))
+        codes_h = np.full((SPP, L, 5), -1, np.int32)
+        for i, c in enumerate(levels0[-1]):
+            codes_h[i] = code_to_array(c, L)
+        n_par0 = len(levels0[-1])
+        sharding = partition_sharding(self.mesh.mesh)
+        pol0, pmask0 = _pad_store(pol, pmask, p_to=SPP, k_to=NV)
+        pol0 = jax.device_put(jnp.asarray(pol0), sharding)
+        pmask0 = jax.device_put(jnp.asarray(pmask0), sharding)
+        M_run = int(pol0.shape[3])
+        oc0 = jnp.asarray(np.full((NL, SPP, L, 5), -1, np.int32))
+        os0 = jnp.asarray(np.zeros((NL, SPP), np.int32))
+        ost0 = jnp.asarray(np.zeros((NL, dloop.NSTAT), np.int32))
+
+        cadence = ckpt.ChunkCadence(start_k, L,
+                                    cfg.device_loop_ckpt_every)
+        escalations = chunks = 0
+        pol_b, pmask_b = pol0, pmask0
+        rw = carry = None
+        while True:                 # run-granular escalation valve
+            carry = (jnp.int32(start_k), jnp.int32(n_par0),
+                     jnp.asarray(codes_h), trip_a, pol_b, pmask_b,
+                     src, dst, emask, oc0, os0, ost0,
+                     jnp.asarray(True), jnp.int32(0))
+            k_cur, escalate = start_k, False
+            for k_stop in cadence.boundaries():
+                for lv in range(k_cur + 1, k_stop + 1):
+                    # chaos hooks, fired host-side per window level so
+                    # fault schedules hit device-loop runs too
+                    faults.maybe_raise("level_start", lv)
+                    faults.maybe_raise("kernel", lv)
+                calls = (1 if cfg.device_loop_unroll <= 0 else
+                         -(-(k_stop - k_cur) // cfg.device_loop_unroll))
+                for _ in range(calls):
+                    out = prog(jnp.int32(k_stop), *carry)
+                    carry = (out[1], out[2], out[3], trip_a, out[4],
+                             out[5], src, dst, emask, out[6], out[7],
+                             out[8], out[9], out[10])
+                chunks += 1
+                # the chunk boundary's (only) host contact
+                body = fetch_wire(out[0], level=k_stop)
+                rw = dloop.decode_run_wire(body, NL, SPP, L)
+                k_cur = k_stop
+                if not rw.ok or rw.n_par == 0:
+                    break
+                if (rw.total_overflow > 0
+                        and M_run < cfg.max_embeddings_limit):
+                    escalate = True
+                    break
+                if cfg.checkpoint_dir and k_cur < L:
+                    levels, sups, _ = self._decode_device_run(
+                        rw, levels0, supports0, start_k)
+                    self._save(cfg.checkpoint_dir, k_cur, levels, sups,
+                               np.asarray(carry[4]), np.asarray(carry[5]),
+                               M_run,
+                               total_overflow + rw.total_overflow, order)
+            if not escalate:
+                break
+            M_run = min(M_run * 2, cfg.max_embeddings_limit)
+            escalations += 1
+            pol_b, pmask_b = _pad_store(pol0, pmask0, m_to=M_run)
+            pol_b = jax.device_put(jnp.asarray(pol_b), sharding)
+            pmask_b = jax.device_put(jnp.asarray(pmask_b), sharding)
+
+        if not rw.ok:
+            bad = int(np.bitwise_or.reduce(
+                rw.stats[:, 4].astype(np.int64)))
+            raise dloop.DeviceLoopFallback(
+                f"device loop bailed at level {rw.k_final} "
+                f"(flags=0b{bad:04b}: CB={CB} CBR={CBR} "
+                f"states={cfg.device_max_states} rows={ROWS})")
+        if rw.total_overflow > 0:
+            raise dloop.DeviceLoopFallback(
+                f"M-cap overflow {rw.total_overflow} persists at the "
+                f"max_embeddings_limit={cfg.max_embeddings_limit} ceiling")
+
+        levels, sups, rows = self._decode_device_run(
+            rw, levels0, supports0, start_k)
+        tovf = total_overflow + rw.total_overflow
+        elapsed = time.perf_counter() - t0
+        per = elapsed / max(len(rows), 1)
+        stats = [LevelStats(lv, nc, nk, ov, per, per, False, imb,
+                            escalations if i == 0 else 0,
+                            survivor_cap=SPP)
+                 for i, (lv, nc, nk, ov, imb) in enumerate(rows)]
+        if cfg.checkpoint_dir and rw.n_par > 0:
+            # the carry store row-aligns with levels[-1] only when the
+            # run ended WITH survivors; a zero-survivor tail keeps the
+            # last boundary save instead
+            self._save(cfg.checkpoint_dir, len(levels), levels, sups,
+                       np.asarray(carry[4]), np.asarray(carry[5]),
+                       M_run, tovf, order)
+        self.last_device_loop = {
+            "completed": True, "fallback": None, "chunks": chunks,
+            "escalations": escalations, "c_budget": CB,
+            "raw_budget": CBR, "sched_rows": ROWS, "spp": SPP,
+            "max_embeddings": M_run, "n_levels": NL, "tile_c": tile_c,
+        }
+        return DistMiningResult(levels, sups, stats, alphabet, minsup,
+                                tovf)
 
     def _level_single_sync(self, meta_p, meta, C, pol, pmask, src, dst,
                            emask, minsup, M, history,

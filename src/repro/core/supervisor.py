@@ -18,6 +18,10 @@ injected or real — and applies one of four recoveries:
                  two-launch pallas/interpret backend; rung 2 abandons
                  the single-sync program for the legacy host-driven
                  pipeline, which dispatches no fused kernel at all).
+                 A ``pipeline="device_loop"`` run gets one extra rung
+                 FIRST: abandon the whole-run loop for the per-level
+                 single-sync program, which re-syncs (and re-checks)
+                 every level instead of once per run.
   transient    → (wire checksum failures and other flaky-link signals)
                  retry with exponential backoff, same configuration.
   state        → (checkpoint integrity) retry: the store has already
@@ -44,11 +48,22 @@ from .mapreduce import MiningMesh
 from .mining import DistMiningResult, Mirage, MirageConfig
 
 __all__ = ["SupervisorConfig", "FaultEvent", "MiningSupervisor",
-           "classify", "elastic_shrink"]
+           "classify", "elastic_shrink", "ladder_for"]
 
 #: degradation-ladder rungs, most- to least-accelerated.  Each entry is
 #: the config override applied at that rung; rung 0 is "as configured".
 LADDER = ("as-configured", "pallas", "legacy")
+
+#: the device-loop pipeline descends one extra rung first: give up the
+#: whole-run while_loop for the per-level single-sync program (same
+#: kernels, but a host sync — and a fresh chance — every level)
+DEVICE_LOOP_LADDER = ("as-configured", "single_sync", "pallas", "legacy")
+
+
+def ladder_for(cfg: MirageConfig) -> tuple[str, ...]:
+    """The degradation ladder the ORIGINAL config starts from."""
+    return (DEVICE_LOOP_LADDER if cfg.pipeline == "device_loop"
+            else LADDER)
 
 
 def classify(exc: BaseException) -> Optional[str]:
@@ -131,6 +146,7 @@ class MiningSupervisor:
         sup = self.sup
         cfg = self.config
         mesh = self.mesh
+        ladder = ladder_for(cfg)
         attempt = 0
         kernel_faults = 0
         while True:
@@ -173,12 +189,12 @@ class MiningSupervisor:
                 elif kind == "kernel":
                     kernel_faults += 1
                     if (kernel_faults % sup.degrade_after == 0
-                            and self.rung < len(LADDER) - 1):
+                            and self.rung < len(ladder) - 1):
                         self.rung += 1
-                        cfg = _degrade(cfg, self.rung)
+                        cfg = _degrade(cfg, ladder[self.rung])
                         action = "degrade"
                         detail = (f"descend ladder to rung {self.rung} "
-                                  f"({LADDER[self.rung]})")
+                                  f"({ladder[self.rung]})")
                 elif kind == "state":
                     detail = ("corrupt checkpoint reaped — resume from "
                               "newest intact step (or restart clean)")
@@ -203,24 +219,32 @@ class MiningSupervisor:
                           f, indent=2)
 
 
-def _degrade(cfg: MirageConfig, rung: int) -> MirageConfig:
-    """Config override for a degradation-ladder rung.
+def _degrade(cfg: MirageConfig, rung: str) -> MirageConfig:
+    """Config override for a degradation-ladder rung, by rung NAME.
 
-    Rung 1 keeps the single-sync pipeline but drops the fused
-    single-launch kernel for the two-launch backend ("pallas" on TPU,
-    its "interpret" twin elsewhere).  Rung 2 falls all the way back to
-    the legacy host-driven pipeline on the "ref" backend — the
-    differential oracle, which dispatches no custom kernel at all.
+    "single_sync" abandons the whole-run device loop for the per-level
+    program (same kernels and shapes, one sync per level).  "pallas"
+    keeps the current pipeline but drops the fused single-launch kernel
+    for the two-launch backend ("pallas" on TPU, its "interpret" twin
+    elsewhere).  "legacy" falls all the way back to the host-driven
+    pipeline on the "ref" backend — the differential oracle, which
+    dispatches no custom kernel at all.
     """
     import jax
 
-    if rung <= 0:
+    if rung == "as-configured":
         return cfg
-    if rung == 1:
+    if rung == "single_sync":
+        return dataclasses.replace(cfg, pipeline="single_sync")
+    if rung == "pallas":
         on_tpu = jax.default_backend() == "tpu"
+        pipeline = ("single_sync" if cfg.pipeline == "device_loop"
+                    else cfg.pipeline)
         return dataclasses.replace(
-            cfg, backend="pallas" if on_tpu else "interpret")
-    return dataclasses.replace(cfg, pipeline="legacy", backend="ref")
+            cfg, pipeline=pipeline,
+            backend="pallas" if on_tpu else "interpret")
+    return dataclasses.replace(cfg, pipeline="legacy", backend="ref",
+                               packed_support=None)
 
 
 def _default_mesh_factory(n_workers: int) -> MiningMesh:

@@ -38,10 +38,35 @@ def main() -> None:
                     choices=[None, "ref", "pallas", "interpret", "fused",
                              "fused_interpret"])
     ap.add_argument("--pipeline", default="single_sync",
-                    choices=["single_sync", "legacy"],
+                    choices=["single_sync", "device_loop", "legacy"],
                     help="single_sync: one device program + one host "
-                         "sync per level (default); legacy: the PR-1 "
-                         "two-program driver")
+                         "sync per level (default); device_loop: the "
+                         "ENTIRE run as one lax.while_loop program with "
+                         "a single device->host transfer (needs "
+                         "--max-size); legacy: the PR-1 two-program "
+                         "driver")
+    ap.add_argument("--candgen", default="host",
+                    choices=["host", "device"],
+                    help="candidate generation for the per-level "
+                         "pipelines: host python generator (default) or "
+                         "the jitted device generator (the device_loop "
+                         "stepping stone)")
+    ap.add_argument("--device-c-budget", type=int, default=None,
+                    help="device_loop: canonical candidate budget per "
+                         "loop iteration (default: auto-sized)")
+    ap.add_argument("--device-raw-budget", type=int, default=None,
+                    help="device_loop: structural slot budget before "
+                         "canonicality (default: 4x the c-budget)")
+    ap.add_argument("--device-max-states", type=int, default=64,
+                    help="device canonicality machine state bound")
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="device_loop: checkpoint-chunk cadence in "
+                         "levels (default: no mid-run checkpoints — "
+                         "exactly one transfer per run)")
+    ap.add_argument("--unroll", type=int, default=0,
+                    help="device_loop: >0 replaces the while_loop with "
+                         "this many cond-gated body applications per "
+                         "program invocation")
     ap.add_argument("--no-bucket", action="store_true",
                     help="disable shape bucketing (one XLA compile per "
                          "mining level instead of per bucket family)")
@@ -90,7 +115,13 @@ def main() -> None:
         reduce=args.reduce, backend=args.backend,
         sharded_wire=False if args.dense_wire else None,
         overlap_candgen=not args.no_overlap,
-        pipeline=args.pipeline, checkpoint_dir=args.ckpt_dir,
+        pipeline=args.pipeline, candgen=args.candgen,
+        device_c_budget=args.device_c_budget,
+        device_raw_budget=args.device_raw_budget,
+        device_max_states=args.device_max_states,
+        device_loop_ckpt_every=args.ckpt_every,
+        device_loop_unroll=args.unroll,
+        checkpoint_dir=args.ckpt_dir,
         bucket_shapes=not args.no_bucket, **bucket_kw)
 
     supervised = args.fault_schedule or args.fault_log
@@ -106,7 +137,15 @@ def main() -> None:
                                   fault_log_path=args.fault_log))
         res = sup.mine(graphs, resume=args.resume)
     else:
-        res = Mirage(cfg).fit(graphs, resume=args.resume)
+        miner = Mirage(cfg)
+        res = miner.fit(graphs, resume=args.resume)
+        if miner.last_device_loop is not None:
+            info = miner.last_device_loop
+            print(f"[mine] device_loop: completed={info['completed']} "
+                  f"chunks={info['chunks']} "
+                  f"escalations={info['escalations']}"
+                  + (f" fallback={info['fallback']}"
+                     if info["fallback"] else ""))
     dt = time.perf_counter() - t0
 
     if supervised and sup.events:

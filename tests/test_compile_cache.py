@@ -182,6 +182,56 @@ def test_fused_tile_c_pinned_per_run(monkeypatch):
         f"the tile_c pin must not add compiles, saw {tr.n_compiles}")
 
 
+def test_device_loop_one_program_one_fetch(monkeypatch):
+    """DESIGN.md §13 compile + transfer budget: a non-escalating
+    device_loop run compiles exactly ONE whole-run program (<=3 with
+    the escalation-retrace allowance) and performs exactly ONE
+    device→host fetch — the end-of-run wire."""
+    from repro.core import device_loop as dloop
+
+    signatures = set()
+    orig_prog = dloop._run_program
+
+    def traced(*key):
+        fn = orig_prog(*key)
+
+        def wrapper(*args):
+            signatures.add((key, tuple(np.shape(a) for a in args)))
+            return fn(*args)
+        return wrapper
+
+    monkeypatch.setattr(dloop, "_run_program", traced)
+
+    graphs = path_db()
+    ref = mine_host(graphs, 6, max_size=8)
+    cfg = MirageConfig(minsup=6, n_partitions=2, max_size=8,
+                       backend="ref", pipeline="device_loop")
+    miner = Mirage(cfg)
+
+    counts = {"n": 0}
+    orig = _jarr.ArrayImpl._value
+
+    def counting(self):
+        counts["n"] += 1
+        return orig.fget(self)
+
+    _jarr.ArrayImpl._value = property(counting)
+    try:
+        res = miner.fit(graphs)
+    finally:
+        _jarr.ArrayImpl._value = orig
+
+    assert miner.last_device_loop["completed"], miner.last_device_loop
+    assert len(res.stats) >= 6, "DB must mine at least 6 levels"
+    assert len(signatures) == 1, (
+        f"{len(signatures)} run programs for a non-escalating run")
+    assert counts["n"] == 1, (
+        f"{counts['n']} device→host transfers for the whole run "
+        f"({len(res.stats)} levels)")
+    assert sorted(res.supports.items()) == sorted(
+        (c, i.support) for c, i in ref.frequent.items())
+
+
 def test_fused_schedule_bucketing_matches_ref(monkeypatch):
     """The fused backend's bucketed schedule (invalid pad tiles, parked
     inverse permutation) must agree with the ref backend compile-for-
