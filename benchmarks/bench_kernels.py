@@ -166,6 +166,7 @@ def run():
     yield from _bench_bucketing()
     yield from _bench_recovery()
     yield from _bench_device_loop()
+    yield from _bench_anytime()
 
 
 def _bench_packed():
@@ -311,6 +312,97 @@ def _bench_recovery():
               f"replayed_from_ckpt=1;events={len(sup_f.events)}")
     yield row("kernels/recovery_overhead", 0.0,
               f"overhead=x{faulted / max(clean, 1e-9):.2f}")
+
+
+def _bench_anytime():
+    """Anytime mining (DESIGN.md §14): the deadline→partial cut, hang
+    detection latency, and the invariant auditor's modeled overhead.
+
+    ``recovery_partial_deadline`` times the full partial-result path —
+    DeadlineExceeded, checkpoint walk, decode, whole-prefix re-audit —
+    and records whether the cut is a verified prefix of the host
+    oracle.  ``recovery_hang_detect`` injects a 999s stall under a
+    pinned 0.5s phase deadline and records the watchdog's measured
+    detection latency (parsed from the supervisor's own fault event).
+    ``auditor_overhead_w*`` is the deterministic byte model
+    ``check_recovery.py`` gates under 5% of the per-level critical
+    path."""
+    import re
+    import shutil
+    import tempfile
+    import time
+
+    from repro.core.auditor import audit_overhead_model
+    from repro.core.graphdb import random_db
+    from repro.core.host_miner import mine_host
+    from repro.core.mining import Mirage, MirageConfig, PartialResult
+    from repro.core.supervisor import MiningSupervisor, SupervisorConfig
+    from repro.runtime import faults
+    from repro.runtime.watchdog import Watchdog
+
+    graphs = random_db(10, seed=5, n_vertices=9, n_vlabels=2, n_elabels=1)
+    ref = mine_host(graphs, 5, max_size=5)
+
+    def cfg(root):
+        return MirageConfig(minsup=5, n_partitions=2, max_size=5,
+                            checkpoint_dir=root)
+
+    # deadline → verified partial cut (checkpoints pre-populated by a
+    # clean audited run, as a real deadline-bound rerun would find them)
+    root = tempfile.mkdtemp(prefix="bench-anytime-")
+    try:
+        Mirage(cfg(root)).fit(graphs)
+        sup = MiningSupervisor(
+            cfg(root), SupervisorConfig(on_exhausted="partial",
+                                        sleep_fn=lambda s: None))
+        t0 = time.perf_counter()
+        res = sup.mine(graphs, deadline_s=1e-6)
+        cut_s = time.perf_counter() - t0
+        n = len(res.levels)
+        prefix_ok = (isinstance(res, PartialResult) and res.audited
+                     and [set(l) for l in res.levels]
+                     == [set(l) for l in ref.levels[:n]]
+                     and all(s == ref.frequent[c].support
+                             for c, s in res.supports.items()))
+        yield row("kernels/recovery_partial_deadline", cut_s,
+                  f"partial={int(isinstance(res, PartialResult))};"
+                  f"prefix_ok={int(prefix_ok)};"
+                  f"last_level={res.last_level}")
+    finally:
+        faults.clear()
+        shutil.rmtree(root, ignore_errors=True)
+
+    # hang detection: a 999s injected stall under a 0.5s phase deadline
+    root = tempfile.mkdtemp(prefix="bench-anytime-")
+    try:
+        faults.install(faults.FaultSchedule.parse("hang@3:secs=999"))
+        sup = MiningSupervisor(
+            cfg(root), SupervisorConfig(sleep_fn=lambda s: None),
+            watchdog=Watchdog(phase_default=0.5))
+        t0 = time.perf_counter()
+        res = sup.mine(graphs)
+        total = time.perf_counter() - t0
+        hang_events = [e for e in sup.events if e.kind == "hang"]
+        assert hang_events, sup.events
+        m = re.search(r"after ([0-9.]+)s", hang_events[0].detail)
+        detect = float(m.group(1)) if m else float("nan")
+        parity = int(sorted(res.supports.items())
+                     == sorted((c, i.support)
+                               for c, i in ref.frequent.items()))
+        yield row("kernels/recovery_hang_detect", total,
+                  f"detect_s={detect:.2f};events={len(hang_events)};"
+                  f"parity={parity}")
+    finally:
+        faults.clear()
+        shutil.rmtree(root, ignore_errors=True)
+
+    # the auditor's modeled byte overhead on the per-level critical path
+    for w in (1, 2, 4, 8):
+        m = audit_overhead_model(1024, 8, w)
+        yield row(f"kernels/auditor_overhead_w{w}", 0.0,
+                  f"overhead={m['overhead']:.4f};"
+                  f"audit_bytes={m['audit_bytes']:.0f};"
+                  f"path_bytes={m['path_bytes']:.0f}")
 
 
 def _bench_device_loop():

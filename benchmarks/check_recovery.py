@@ -1,0 +1,99 @@
+"""CI gate for anytime mining & the invariant auditor (DESIGN.md §14).
+
+    PYTHONPATH=src python -m benchmarks.check_recovery BENCH_kernels.json
+
+Wall time on shared CI runners is too noisy to gate on, so the gate
+checks DETERMINISTIC invariants recorded by ``bench_kernels``:
+
+  1. every ``kernels/auditor_overhead_w{W}`` row must hold the audit's
+     modeled bytes under 5% of the level's modeled critical path (wire
+     + candidate-meta upload) — the auditor must stay effectively free;
+  2. ``kernels/recovery_partial_deadline`` must read ``partial=1`` AND
+     ``prefix_ok=1``: a deadline-bound run returned a PartialResult
+     that re-verified as an exact prefix of the host oracle;
+  3. ``kernels/recovery_hang_detect`` must show the 999s injected stall
+     detected in bounded time (``detect_s`` within 60x the pinned 0.5s
+     phase deadline — generous, but a hung detector would read 999)
+     with full parity after recovery;
+  4. ``kernels/recovery_one_fault`` (the §10 row) must still record
+     exactly one replayed fault — the §14 machinery must not have
+     perturbed plain checkpoint recovery.
+"""
+import json
+import re
+import sys
+
+MAX_OVERHEAD = 0.05
+MAX_DETECT_S = 30.0
+
+
+def _field(derived: str, key: str) -> float:
+    m = re.search(rf"(?:^|;){key}=([0-9.]+)", derived)
+    if m is None:
+        raise SystemExit(f"missing '{key}' in derived field: {derived!r}")
+    return float(m.group(1))
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
+    with open(path) as f:
+        rows = json.load(f)
+
+    failures = []
+
+    overhead_rows = sorted(r for r in rows
+                           if r.startswith("kernels/auditor_overhead_w"))
+    if not overhead_rows:
+        raise SystemExit(f"{path}: no kernels/auditor_overhead_w* rows "
+                         f"— run bench_kernels first")
+    overheads = {}
+    for name in overhead_rows:
+        ov = _field(rows[name]["derived"], "overhead")
+        overheads[name] = ov
+        if not ov < MAX_OVERHEAD:
+            failures.append(
+                f"{name}: modeled audit overhead {ov:.4f} is not under "
+                f"the {MAX_OVERHEAD:.0%} critical-path budget")
+
+    for required in ("kernels/recovery_partial_deadline",
+                     "kernels/recovery_hang_detect",
+                     "kernels/recovery_one_fault"):
+        if required not in rows:
+            raise SystemExit(f"{path}: missing {required} row")
+
+    pd = rows["kernels/recovery_partial_deadline"]["derived"]
+    if _field(pd, "partial") != 1.0:
+        failures.append("recovery_partial_deadline: no PartialResult "
+                        "was returned")
+    if _field(pd, "prefix_ok") != 1.0:
+        failures.append("recovery_partial_deadline: the partial result "
+                        "is NOT a verified prefix of the host oracle")
+
+    hd = rows["kernels/recovery_hang_detect"]["derived"]
+    detect = _field(hd, "detect_s")
+    if not detect < MAX_DETECT_S:
+        failures.append(
+            f"recovery_hang_detect: {detect:.2f}s to detect the "
+            f"injected stall (bound {MAX_DETECT_S:.0f}s)")
+    if _field(hd, "parity") != 1.0:
+        failures.append("recovery_hang_detect: post-recovery result "
+                        "lost parity with the host oracle")
+
+    of = rows["kernels/recovery_one_fault"]["derived"]
+    if _field(of, "events") != 1.0:
+        failures.append("recovery_one_fault: plain checkpoint recovery "
+                        "no longer records exactly one event")
+
+    if failures:
+        for f_ in failures:
+            print(f"RECOVERY GATE FAIL: {f_}", file=sys.stderr)
+        sys.exit(1)
+    summary = ", ".join(f"{n.rsplit('_', 1)[1]}={v:.1%}"
+                        for n, v in overheads.items())
+    print(f"recovery gate OK: auditor overhead {summary} "
+          f"(budget {MAX_OVERHEAD:.0%}), deadline partial is a verified "
+          f"prefix, hang detected in {detect:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -138,9 +138,10 @@ def validate_db(graphs: Sequence[Graph]) -> None:
     boundary (``make_partitions`` calls this before any filtering).
 
     Rejected with a :class:`GraphValidationError` naming the offending
-    graph: empty graphs, negative vertex/edge labels, edge-label arrays
-    not matching the edge count, dangling edge endpoints (out of
-    ``[0, n_v)``), self-loops, and duplicate undirected edges.  Only
+    graph AND (for per-edge defects) the offending edge index: empty
+    graphs, negative vertex/edge labels, edge-label arrays not matching
+    the edge count, dangling edge endpoints (out of ``[0, n_v)``),
+    self-loops, and duplicate undirected edges.  Only
     *user input* is checked — internally derived graphs (e.g. after
     infrequent-edge filtering, which legitimately empties graphs) never
     pass through here.
@@ -164,23 +165,36 @@ def validate_db(graphs: Sequence[Graph]) -> None:
         if g.n_edges == 0:
             continue
         if g.elabels.min() < 0:
+            j = int(np.flatnonzero(g.elabels < 0)[0])
             raise GraphValidationError(
-                f"graph {i}: negative edge label {int(g.elabels.min())}")
-        lo, hi = g.edges.min(), g.edges.max()
-        if lo < 0 or hi >= g.n_vertices:
+                f"graph {i}, edge {j}: negative edge label "
+                f"{int(g.elabels[j])}")
+        bad = np.flatnonzero((g.edges < 0).any(axis=1)
+                             | (g.edges >= g.n_vertices).any(axis=1))
+        if bad.size:
+            j = int(bad[0])
+            u, v = (int(x) for x in g.edges[j])
             raise GraphValidationError(
-                f"graph {i}: dangling edge endpoint {int(lo if lo < 0 else hi)} "
+                f"graph {i}, edge {j}: dangling edge endpoint "
+                f"{u if u < 0 or u >= g.n_vertices else v} "
                 f"outside [0, {g.n_vertices})")
-        if (g.edges[:, 0] == g.edges[:, 1]).any():
-            u = int(g.edges[g.edges[:, 0] == g.edges[:, 1]][0, 0])
-            raise GraphValidationError(f"graph {i}: self-loop at vertex {u}")
+        loops = np.flatnonzero(g.edges[:, 0] == g.edges[:, 1])
+        if loops.size:
+            j = int(loops[0])
+            raise GraphValidationError(
+                f"graph {i}, edge {j}: self-loop at vertex "
+                f"{int(g.edges[j, 0])}")
         # Graph.__post_init__ normalized endpoints to u < v, so exact
         # row duplicates are exactly duplicate undirected edges
-        uniq = np.unique(g.edges, axis=0)
+        uniq, first, counts = np.unique(g.edges, axis=0,
+                                        return_index=True,
+                                        return_counts=True)
         if uniq.shape[0] != g.n_edges:
+            j = int(first[counts > 1][0])
+            u, v = (int(x) for x in g.edges[j])
             raise GraphValidationError(
-                f"graph {i}: duplicate edges "
-                f"({g.n_edges - uniq.shape[0]} repeated)")
+                f"graph {i}, edge {j}: duplicate edge ({u}, {v}) — "
+                f"{g.n_edges - uniq.shape[0]} repeated row(s)")
 
 
 def encode_db(

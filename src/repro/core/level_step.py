@@ -38,7 +38,9 @@ int32 *wire*.  The wire comes in two layouts (DESIGN.md §11):
   [Cp+1]      overflow (matches dropped by the M cap, survivors only)
   [Cp+2]      rebalanced flag (0/1)
   [Cp+3]      imbalance, 16.16 fixed point
-  [Cp+4:-1]   the (NP,) partition permutation that was applied
+  [Cp+4]      audit word — device-side invariant check bit flags
+              (DESIGN.md §14; 0 = every check passed)
+  [Cp+5:-1]   the (NP,) partition permutation that was applied
   [-1]        checksum word over everything before it (DESIGN.md §10)
 
 **Sharded** (``reduce_scatter``; the default single-sync layout) — the
@@ -48,9 +50,10 @@ worker packs (and transfers to the host) only its own C/W key slice,
 plus a replicated copy of the scalar words and permutation and its own
 shard checksum:
 
-  worker w's shard (length Cp/W + 4 + NP + 1):
+  worker w's shard (length Cp/W + 5 + NP + 1):
     [0:Cp/W]  global support for keys [w·Cp/W, (w+1)·Cp/W)
-    [...]     n_keep | overflow | rebalanced | imbalance | perm | checksum
+    [...]     n_keep | overflow | rebalanced | imbalance | audit | perm
+              | checksum
 
 The host reassembles the canonical (Cp,) support vector by concatenating
 the verified shards (blocked dim-0 sharding ⇒ device order is key
@@ -123,9 +126,20 @@ from .mapreduce import MiningMesh, reduce_supports, worker_imbalance
 __all__ = ["LevelWire", "LevelOutputs", "PendingLevel", "dispatch_level",
            "run_level", "unpack_wire", "reassemble_wire", "wire_words",
            "wire_cost_model", "lpt_permutation", "wire_checksum",
-           "fetch_wire"]
+           "fetch_wire", "AUDIT_MONOTONIC", "AUDIT_COMPACT",
+           "AUDIT_RANGE", "AUDIT_NKEEP"]
 
 _IMBAL_FX = 1 << 16
+
+# wire scalar words per shard: n_keep | overflow | rebalanced |
+# imbalance | audit (DESIGN.md §14)
+_N_SCALARS = 5
+
+# audit-word bit flags (device-side invariant checks, 0 = clean)
+AUDIT_MONOTONIC = 1     # child support exceeds its parent's support
+AUDIT_COMPACT = 2       # a valid compact slot holds a non-survivor
+AUDIT_RANGE = 4         # support negative or above the DB graph count
+AUDIT_NKEEP = 8         # survivor count exceeds the real candidate count
 
 # Fibonacci / murmur-style 32-bit odd mixing constants.  The checksum is
 # a position-salted multiplicative sum: word i contributes
@@ -154,7 +168,7 @@ def wire_checksum(wire):
 def wire_words(cp: int, n_partitions: int, n_shards: int = 1,
                packed: bool = False) -> int:
     """Total int32 words of the packed wire: ``n_shards`` shards of
-    [gsup slice | 4 scalars | perm | checksum].  ``n_shards=1`` is the
+    [gsup slice | 5 scalars | perm | checksum].  ``n_shards=1`` is the
     dense layout.  With ``packed`` (DESIGN.md §12) each shard's gsup
     slice ships two uint16 supports per int32 word — ``ceil(cs/2)``
     words for a ``cs``-support slice."""
@@ -162,7 +176,7 @@ def wire_words(cp: int, n_partitions: int, n_shards: int = 1,
         raise ValueError(f"Cp={cp} not divisible into {n_shards} shards")
     cs = cp // n_shards
     gw = -(-cs // 2) if packed else cs
-    return n_shards * (gw + 4 + n_partitions + 1)
+    return n_shards * (gw + _N_SCALARS + n_partitions + 1)
 
 
 def reassemble_wire(host: np.ndarray, n_partitions: int,
@@ -187,7 +201,7 @@ def reassemble_wire(host: np.ndarray, n_partitions: int,
         if int(wire_checksum(s[:-1])) != int(s[-1]):
             return None
     if not packed:
-        cs = shards.shape[1] - (4 + n_partitions + 1)  # gsup words/shard
+        cs = shards.shape[1] - (_N_SCALARS + n_partitions + 1)
         return np.concatenate([shards[:, :cs].reshape(-1), shards[0, cs:-1]])
     if cp is None:
         raise ValueError("packed wire reassembly needs cp")
@@ -229,7 +243,7 @@ def wire_cost_model(cp: int, n_partitions: int, n_workers: int, *,
     if sharded is None:
         sharded = reduce == "reduce_scatter"
     ring = (W - 1) / W
-    tail = 4 + n_partitions + 1                   # scalars + perm + csum
+    tail = _N_SCALARS + n_partitions + 1          # scalars + perm + csum
     vbytes = (-(-cp // 32) * 4) if packed else cp * 1   # verdict gather
 
     def gw(n):                                    # gsup words on the wire
@@ -258,6 +272,7 @@ class LevelWire:
     rebalanced: bool
     imbalance: float
     perm: np.ndarray        # (NP,) applied partition permutation
+    audit: int = 0          # device audit bit flags (0 = clean, §14)
 
 
 @dataclasses.dataclass
@@ -307,7 +322,8 @@ def _level_program(mmesh: MiningMesh, minsup: int,
                    backend: Backend, reduce: str, max_embeddings: int,
                    survivor_cap: int, rebalance: bool, threshold: float,
                    donate: bool, child_width: Optional[int],
-                   sharded: bool, packed: bool = False):
+                   sharded: bool, packed: bool = False,
+                   n_graphs: int = -1):
     """Build (and cache per static config) the jitted level program.
 
     The true candidate count is a TRACED argument (``c_real``), not part
@@ -341,7 +357,7 @@ def _level_program(mmesh: MiningMesh, minsup: int,
             f"the sharded wire needs reduce='reduce_scatter' (each worker "
             f"owns a support slice), got reduce={reduce!r}")
 
-    def _pack_wire(gsup, n_keep, overflow, do_reb, imbal, perm):
+    def _pack_wire(gsup, n_keep, overflow, do_reb, imbal, audit, perm):
         gsup = gsup.astype(jnp.int32)
         if packed:
             # two uint16 supports per int32 word (lossless: the driver
@@ -356,7 +372,8 @@ def _level_program(mmesh: MiningMesh, minsup: int,
         body = jnp.concatenate([
             gsup,
             jnp.stack([n_keep, overflow, do_reb.astype(jnp.int32),
-                       (imbal * _IMBAL_FX).astype(jnp.int32)]),
+                       (imbal * _IMBAL_FX).astype(jnp.int32),
+                       audit.astype(jnp.int32)]),
             perm,
         ])
         return jnp.concatenate([body, wire_checksum(body)[None]])
@@ -374,7 +391,7 @@ def _level_program(mmesh: MiningMesh, minsup: int,
             perm = jnp.arange(NP, dtype=jnp.int32)
         return do_reb, imbal, perm
 
-    def core(c_real, *args):
+    def core(c_real, psup, *args):
         if fused:
             sched_meta, tiles, inv, pol, pmask, src, dst, emask = args
             if packed:
@@ -419,6 +436,40 @@ def _level_program(mmesh: MiningMesh, minsup: int,
         cmeta = jnp.take(meta_can, surv, axis=0)            # (S, 5)
         valid_s = jnp.arange(S) < n_keep                    # (S,)
 
+        # continuous invariant audit (DESIGN.md §14): bit flags over the
+        # level's own outputs, folded into the checksummed wire.  psup
+        # is PARENT-indexed (one int32 per parent-store slot, -1 =
+        # unknown / padding); each candidate gathers its parent's
+        # support through the replicated meta parent column, so the
+        # upload is O(parents), not O(candidates).  In sharded mode
+        # gsup is this worker's key slice, so the slice-local violation
+        # counts are psummed; the compaction and survivor-count checks
+        # run on replicated values.
+        par = meta_can[:, 0]
+        psc = jnp.where(
+            (par >= 0) & (par < psup.shape[0]),
+            jnp.take(psup, jnp.clip(par, 0, psup.shape[0] - 1)), -1)
+        if sharded:
+            w_idx = jax.lax.axis_index(axes)
+            cs_a = gsup.shape[0]
+            psl = jax.lax.dynamic_slice(psc, (w_idx * cs_a,), (cs_a,))
+            real_a = (w_idx * cs_a + jnp.arange(cs_a)) < c_real
+        else:
+            psl, real_a = psc, real
+        gs_a = gsup.astype(jnp.int32)
+        mono_bad = ((gs_a > psl) & real_a & (psl >= 0)).sum()
+        rng_bad = (((gs_a < 0) | (gs_a > n_graphs)) & real_a).sum() \
+            if n_graphs >= 0 else jnp.zeros((), jnp.int32)
+        if sharded:
+            mono_bad = jax.lax.psum(mono_bad, axes)
+            rng_bad = jax.lax.psum(rng_bad, axes)
+        comp_bad = (valid_s & ~jnp.take(keep, surv)).sum()
+        audit = (jnp.where(mono_bad > 0, AUDIT_MONOTONIC, 0)
+                 | jnp.where(comp_bad > 0, AUDIT_COMPACT, 0)
+                 | jnp.where(rng_bad > 0, AUDIT_RANGE, 0)
+                 | jnp.where(n_keep > c_real, AUDIT_NKEEP, 0)
+                 ).astype(jnp.int32)
+
         # pass 2, cond-gated per compact slot: lax.map is a scan, so the
         # skip branch of invalid (cap-padding) slots really executes a
         # constant fill — unlike a vmapped select, padding costs ~nothing
@@ -450,7 +501,7 @@ def _level_program(mmesh: MiningMesh, minsup: int,
         overflow = jax.lax.psum(over_s.sum(), axes)
         cost_pp = (emb_pp * real[None, :].astype(emb_pp.dtype)).sum(1)
         if not sharded:
-            return gsup, n_keep, overflow, ol, mask, cost_pp
+            return gsup, n_keep, overflow, audit, ol, mask, cost_pp
         # sharded wire: the LPT/rebalance decision moves inside the
         # shard_map (fed by an all-gather of the TINY (NP,) cost
         # vector), and each worker packs its own shard — support slice,
@@ -458,32 +509,35 @@ def _level_program(mmesh: MiningMesh, minsup: int,
         # device→host transfer is then 1/W-sized per worker.
         cost = jax.lax.all_gather(cost_pp, axes, axis=0, tiled=True)
         do_reb, imbal, perm = _rebalance(cost)
-        shard = _pack_wire(gsup, n_keep, overflow, do_reb, imbal, perm)
+        shard = _pack_wire(gsup, n_keep, overflow, do_reb, imbal, audit,
+                           perm)
         return shard, ol, mask
 
     n_meta = 3 if fused else 1
     out_specs = ((parts, parts, parts) if sharded
-                 else (rep, rep, rep, parts, parts, parts))
+                 else (rep, rep, rep, rep, parts, parts, parts))
     smapped = jax_compat.shard_map(
         core, mesh=mmesh.mesh,
-        in_specs=(rep,) * (1 + n_meta) + (parts,) * 5,
+        in_specs=(rep,) * (2 + n_meta) + (parts,) * 5,
         out_specs=out_specs, check_vma=False)
 
     if sharded:
         program = smapped
     else:
         def program(*args):
-            gsup, n_keep, overflow, ol, mask, cost = smapped(*args)
+            (gsup, n_keep, overflow, audit, ol, mask,
+             cost) = smapped(*args)
             do_reb, imbal, perm = _rebalance(cost)
-            wire = _pack_wire(gsup, n_keep, overflow, do_reb, imbal, perm)
+            wire = _pack_wire(gsup, n_keep, overflow, do_reb, imbal,
+                              audit, perm)
             return wire, ol, mask
 
     donate_argnums = ()
     if donate:
-        # the parent OL store (after c_real + the meta args).  With
-        # bucketed shapes the child store matches it exactly, so this
-        # is a true arena alias, not just an early free.
-        donate_argnums = (1 + n_meta, 2 + n_meta)
+        # the parent OL store (after c_real + psup + the meta args).
+        # With bucketed shapes the child store matches it exactly, so
+        # this is a true arena alias, not just an early free.
+        donate_argnums = (2 + n_meta, 3 + n_meta)
     return jax.jit(program, donate_argnums=donate_argnums)
 
 
@@ -552,7 +606,8 @@ def unpack_wire(wire: np.ndarray, C: int, Cp: int, n_partitions: int
         overflow=int(wire[Cp + 1]),
         rebalanced=bool(wire[Cp + 2]),
         imbalance=float(wire[Cp + 3]) / _IMBAL_FX,
-        perm=wire[Cp + 4: Cp + 4 + n_partitions],
+        perm=wire[Cp + 5: Cp + 5 + n_partitions],
+        audit=int(wire[Cp + 4]),
     )
 
 
@@ -614,6 +669,8 @@ def dispatch_level(
     sharded: bool = False,
     packed: bool = False,
     tile_c: Optional[int] = None,
+    psup: Optional[np.ndarray] = None,
+    n_graphs: int = -1,
 ) -> PendingLevel:
     """Dispatch one level program WITHOUT the host sync.
 
@@ -634,6 +691,16 @@ def dispatch_level(
     for the run (None = the adaptive per-call choice); the driver pins
     it from the level-2 grouping so the kernel grid — and therefore the
     compiled program — stays constant across levels.
+
+    ``psup`` feeds the device-side invariant audit (DESIGN.md §14): the
+    PARENT-indexed support vector, one int32 per slot of the parent
+    store's pattern axis in canonical order (-1 = unknown, which skips
+    the monotonicity check for candidates of that parent).  It is
+    padded to the store's parent axis, so the upload is O(parents) —
+    each candidate gathers its parent's support on device through the
+    meta parent column.  ``n_graphs`` (the DB graph count) arms the
+    support-range check; -1 disables it.  The audit word rides home in
+    the wire; a zero word certifies the level passed every check.
     """
     Cp = meta_p.shape[0]
     n_partitions = pol.shape[0]
@@ -649,8 +716,17 @@ def dispatch_level(
     faults.maybe_raise("kernel", level)
     fn = _level_program(mmesh, minsup, backend, reduce,
                         max_embeddings, survivor_cap, rebalance,
-                        threshold, donate, child_width, sharded, packed)
+                        threshold, donate, child_width, sharded, packed,
+                        n_graphs)
     c_real = jnp.asarray(C_real, jnp.int32)
+    # pad to the parent store's pattern axis: the psup length then moves
+    # with the same bucket family as pol, costing no extra compiles
+    P_axis = pol.shape[1]
+    psup_p = np.full((P_axis,), -1, np.int32)
+    if psup is not None:
+        n_par = min(len(psup), P_axis)
+        psup_p[:n_par] = np.asarray(psup, np.int32)[:n_par]
+    psup_d = jnp.asarray(psup_p)
     if is_fused_backend(backend):
         from ..kernels.fused_level import DEFAULT_TILE_C
         from .buckets import bucket_size
@@ -673,10 +749,12 @@ def dispatch_level(
             sched = schedule_candidates(np.asarray(meta_p)[:C_real], tc)
             rows = sched.meta.shape[0]
         sched = pad_schedule(sched, rows_to=rows, inv_to=Cp)
-        out = fn(c_real, jnp.asarray(sched.meta), jnp.asarray(sched.tiles),
-                 jnp.asarray(sched.inv), pol, pmask, src, dst, emask)
+        out = fn(c_real, psup_d, jnp.asarray(sched.meta),
+                 jnp.asarray(sched.tiles), jnp.asarray(sched.inv),
+                 pol, pmask, src, dst, emask)
     else:
-        out = fn(c_real, jnp.asarray(meta_p), pol, pmask, src, dst, emask)
+        out = fn(c_real, psup_d, jnp.asarray(meta_p), pol, pmask, src,
+                 dst, emask)
     wire_d, new_pol, new_pmask = out
     return PendingLevel(wire_d, new_pol, new_pmask, src, dst, emask,
                         C_real, Cp, n_partitions,

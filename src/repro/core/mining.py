@@ -56,7 +56,9 @@ from ..kernels.ops import Backend, default_backend, is_fused_backend
 from ..runtime import checkpoint as ckpt
 from ..runtime import faults
 from ..runtime.sharding import partition_sharding
+from ..runtime.watchdog import Watchdog
 from . import device_loop as dloop
+from .auditor import Auditor
 from .buckets import BucketSpec, bucket_size, round_up_multiple
 from .candgen import (Candidate, EdgeAlphabet, candidates_from_arrays,
                       device_candgen_jit, filter_speculative,
@@ -68,8 +70,9 @@ from .level_step import _IMBAL_FX, dispatch_level, fetch_wire, permute_stores
 from .mapreduce import MiningMesh, map_materialize, map_reduce_supports
 from .partition import make_partitions
 
-__all__ = ["MirageConfig", "LevelStats", "DistMiningResult", "Mirage",
-           "DonationPolicy", "DonationRetryRebuild"]
+__all__ = ["MirageConfig", "LevelStats", "DistMiningResult",
+           "PartialResult", "Mirage", "DonationPolicy",
+           "DonationRetryRebuild", "decode_saved_levels"]
 
 PIPELINES = ("single_sync", "device_loop", "legacy")
 CANDGENS = ("host", "device")
@@ -203,6 +206,18 @@ class MirageConfig:
     bucket_c_floor: int = 64            # candidate axis Cp (+ sched rows)
     bucket_s_floor: int = 32            # survivor cap S / parent axis P
     bucket_k_floor: int = 8             # OL vertex-slot axis K
+    # ---- continuous invariant auditor + deadlines (DESIGN.md §14) ----
+    # device audit word folded into the wire (monotonicity, compaction,
+    # range, survivor-count) + sampled host spot checks each level
+    # (downward closure, DFS-code canonicality); violations raise
+    # AuditError, a state-class fault the supervisor heals by replay
+    audit: bool = True
+    audit_samples: int = 2              # host spot checks per level
+    # watchdog phase-deadline policy: deadline = max(floor, slack·EWMA)
+    # of recent level wall-times; floor=0 with no EWMA sample = unarmed
+    # (the first level usually contains compilation)
+    level_deadline_floor: float = 0.0
+    level_deadline_slack: float = 8.0
 
     def __post_init__(self):
         if self.pipeline not in PIPELINES:
@@ -240,6 +255,10 @@ class MirageConfig:
                     "— the loop mines at one uniform M and reruns doubled "
                     "on overflow, matching only the exact (escalated) "
                     "host semantics")
+        if self.level_deadline_slack < 1.0:
+            raise ValueError(
+                f"level_deadline_slack={self.level_deadline_slack} must "
+                f"be >= 1 — a sub-unit slack trips on every level")
         if self.pipeline == "device_loop" or self.candgen == "device":
             # device candgen makes host speculation structurally
             # impossible mid-loop — disable it statically (satellite:
@@ -283,6 +302,47 @@ class DistMiningResult:
 
 
 @dataclasses.dataclass
+class PartialResult:
+    """A verified *prefix* of the full answer (anytime contract, §14).
+
+    MIRAGE's level-synchronous loop makes every completed level a
+    complete, valid answer to "all frequent subgraphs up to size k" —
+    so when the supervisor's retry budget, degradation ladder, or run
+    deadline is exhausted, it cuts here: the frequent set through the
+    newest intact *audited* checkpoint, re-verified by
+    :func:`~repro.core.auditor.audit_frequent_set` before it is
+    trusted.  ``complete`` is always False (the marker callers branch
+    on); ``audited`` is False only for the trivially valid empty prefix
+    (no surviving checkpoint)."""
+
+    levels: list[list[Code]]
+    supports: dict[Code, int]
+    minsup: Optional[int]
+    last_level: int                     # deepest audited complete level
+    reason: str                         # "deadline" | "budget-exhausted"
+    audited: bool
+    complete: bool = False
+    events: list[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def frequent(self) -> dict[Code, int]:
+        return self.supports
+
+    def counts(self) -> list[int]:
+        return [len(l) for l in self.levels]
+
+
+def decode_saved_levels(state: dict) -> tuple[list[list[Code]],
+                                              dict[Code, int]]:
+    """Decode a checkpoint's (levels, supports) arrays back into codes —
+    shared by resume and the supervisor's partial-result cut."""
+    levels = [[array_to_code(a) for a in lvl] for lvl in state["levels"]]
+    supports = {array_to_code(a): int(s) for a, s in
+                zip(state["support_codes"], state["support_vals"])}
+    return levels, supports
+
+
+@dataclasses.dataclass
 class _LevelOutcome:
     """What one mined level hands back to the driver loop, identical for
     both pipelines."""
@@ -309,6 +369,9 @@ class _LevelOutcome:
     # speculated — regenerate from F_{k+1} as usual)
     spec_cands: Optional[list[Candidate]] = None
     candgen_seconds: float = 0.0
+    # device audit word from the wire (0 = every invariant held; the
+    # legacy pipeline computes no word and always reports 0)
+    audit: int = 0
 
 
 class Mirage:
@@ -324,6 +387,11 @@ class Mirage:
         # gate): {"completed": bool, "fallback": Optional[str], ...};
         # None until a device_loop fit has executed
         self.last_device_loop: Optional[dict] = None
+        # per-run invariant auditor (§14); rebuilt by each fit() once
+        # minsup and the DB graph count are known
+        self.auditor: Optional[Auditor] = None
+        self._watchdog: Optional[Watchdog] = None
+        self._ckpt_meta: dict = {}
         if config.n_partitions % self.mesh.n_workers:
             raise ValueError(
                 f"n_partitions={config.n_partitions} must be a multiple of "
@@ -345,8 +413,9 @@ class Mirage:
         return clamped
 
     # ------------------------------------------------------------------
-    def fit(self, graphs: Sequence[Graph], *, resume: bool = False
-            ) -> DistMiningResult:
+    def fit(self, graphs: Sequence[Graph], *, resume: bool = False,
+            watchdog: Optional[Watchdog] = None,
+            deadline_s: Optional[float] = None) -> DistMiningResult:
         cfg = self.cfg
 
         # peek the checkpoint first: the partition count is baked into
@@ -379,6 +448,26 @@ class Mirage:
                           for t in (c, (c[2], c[1], c[0]))})
         if not triples:
             return DistMiningResult([], {}, [], alphabet, minsup, 0)
+
+        # ---- §14 run plumbing: auditor + deadline watchdog -------------
+        n_graphs = part.n_graphs
+        self.auditor = (Auditor(minsup=minsup, n_graphs=n_graphs,
+                                samples=cfg.audit_samples)
+                        if cfg.audit else None)
+        wd = watchdog
+        if wd is None and deadline_s is not None:
+            wd = Watchdog(deadline_s,
+                          phase_floor=cfg.level_deadline_floor,
+                          phase_slack=cfg.level_deadline_slack)
+        self._watchdog = wd
+        if wd is not None:
+            wd.start()
+        # checkpoint metadata the supervisor's partial-result cut reads:
+        # a step is a candidate cut point only when it was written by an
+        # auditing run (and its prefix re-verifies on load)
+        self._ckpt_meta = {"audited": bool(cfg.audit),
+                           "minsup": int(minsup),
+                           "n_graphs": int(n_graphs)}
 
         # ---- phase 2: preparation (host, once) -------------------------
         G = max((len(p) for p in part.partitions), default=1)
@@ -421,9 +510,7 @@ class Mirage:
         # ---- resume (elastic: mesh may differ from writer's) ----------
         if resume_state is not None:
             state = resume_state
-            levels = [[array_to_code(a) for a in lvl] for lvl in state["levels"]]
-            supports = {array_to_code(a): int(s) for a, s in
-                        zip(state["support_codes"], state["support_vals"])}
+            levels, supports = decode_saved_levels(state)
             pol, pmask = state["pol"], state["pmask"]
             start_level = int(resume_meta["step"])
             M = int(state["max_embeddings"])
@@ -488,6 +575,10 @@ class Mirage:
         prev_dev = 0.0
         while cfg.max_size is None or k < cfg.max_size:
             t0 = time.perf_counter()
+            if wd is not None:
+                # cooperative run-deadline check at the loop head — the
+                # only place a DeadlineExceeded can safely unwind from
+                wd.check_run(level=k + 1)
             if cands is None and cfg.candgen == "device":
                 # the stepping-stone device candgen: one jitted
                 # device_candidates dispatch instead of the host
@@ -512,10 +603,24 @@ class Mirage:
             meta_p = np.concatenate(
                 [meta, np.tile([[0, 0, 0, 1, 0]], (Cp - C, 1))]).astype(np.int32)
 
+            # parent supports for the device audit word (§14): one
+            # int32 per parent pattern, indexed on device through the
+            # meta parent column (-1 = unknown, e.g. a resumed run
+            # whose map predates the parent) — monotonicity
+            # gsup <= psup[parent] is anti-monotone pruning's invariant
+            psup = None
+            if cfg.audit and cfg.pipeline != "legacy":
+                psup = np.array(
+                    [supports.get(p, -1) for p in levels[-1]], np.int32)
+            if wd is not None:
+                # arm the phase deadline around the device dispatch —
+                # the stretch a hang would otherwise block unobserved
+                wd.arm(level=k + 1)
+
             if cfg.pipeline == "legacy":
                 out = self._level_legacy(
                     meta_p, meta, C, pol, pmask, src_d, dst_d, emask_d,
-                    minsup, M, n_parts)
+                    minsup, M, n_parts, level=k + 1)
             else:
                 # child patterns (size k+1) have at most k+2 vertices;
                 # the bucketed width reuses the parent store's while the
@@ -538,16 +643,29 @@ class Mirage:
                         cands=cands, alphabet=alphabet,
                         cand_rate=cand_rate,
                         spec_window=max(prev_dev,
-                                        cfg.overlap_spec_window))
+                                        cfg.overlap_spec_window),
+                        psup=psup, n_graphs=n_graphs)
                 except DonationRetryRebuild:
                     # the armed-donation gamble lost: the arena consumed
                     # the parents, so restore them from the latest intact
                     # checkpoint (canonical store re-padded + cumulative
                     # rebalance permutation re-applied) and replay
+                    if wd is not None:
+                        wd.disarm()
                     pol, pmask = self._rebuild_parents(order)
                     policy.record_rebuild()
                     continue
                 policy.record(out.retried)
+            if wd is not None:
+                # feed the level's wall-time into the EWMA the next
+                # phase deadline is derived from
+                wd.disarm(observe_s=time.perf_counter() - t0)
+            if self.auditor is not None:
+                self.auditor.check_wire(k + 1, out.audit)
+                if len(out.keep):
+                    self.auditor.check_level(
+                        k + 1, cands=cands, keep=out.keep, gsup=out.gsup,
+                        parents=levels[-1], supports=supports)
             prev_dev = max(out.map_seconds - out.candgen_seconds, 0.0)
             if out.spec_cands is not None and cands:
                 r = out.candgen_seconds / len(cands)
@@ -846,6 +964,7 @@ class Mirage:
         escalations = chunks = 0
         pol_b, pmask_b = pol0, pmask0
         rw = carry = None
+        wd = self._watchdog
         while True:                 # run-granular escalation valve
             carry = (jnp.int32(start_k), jnp.int32(n_par0),
                      jnp.asarray(codes_h), trip_a, pol_b, pmask_b,
@@ -853,6 +972,13 @@ class Mirage:
                      jnp.asarray(True), jnp.int32(0))
             k_cur, escalate = start_k, False
             for k_stop in cadence.boundaries():
+                if wd is not None:
+                    # each ChunkCadence re-invocation doubles as a
+                    # heartbeat: the run-deadline check fires here, and
+                    # the phase deadline re-arms over the coming chunk
+                    wd.check_run(level=k_stop)
+                    wd.arm(level=k_stop)
+                t_chunk = time.perf_counter()
                 for lv in range(k_cur + 1, k_stop + 1):
                     # chaos hooks, fired host-side per window level so
                     # fault schedules hit device-loop runs too
@@ -866,10 +992,15 @@ class Mirage:
                              out[5], src, dst, emask, out[6], out[7],
                              out[8], out[9], out[10])
                 chunks += 1
+                # chaos hook: a stalled chunk — the armed phase deadline
+                # (and the device_loop→single_sync rung) bounds it
+                faults.maybe_hang("chunk", k_stop, wd)
                 # the chunk boundary's (only) host contact
                 body = fetch_wire(out[0], level=k_stop)
                 rw = dloop.decode_run_wire(body, NL, SPP, L)
                 k_cur = k_stop
+                if wd is not None:
+                    wd.disarm(observe_s=time.perf_counter() - t_chunk)
                 if not rw.ok or rw.n_par == 0:
                     break
                 if (rw.total_overflow > 0
@@ -879,6 +1010,11 @@ class Mirage:
                 if cfg.checkpoint_dir and k_cur < L:
                     levels, sups, _ = self._decode_device_run(
                         rw, levels0, supports0, start_k)
+                    if self.auditor is not None:
+                        # a boundary save is a potential partial-result
+                        # cut point: audit the whole decoded prefix
+                        # BEFORE it reaches disk as "audited"
+                        self.auditor.check_levels(levels, sups)
                     self._save(cfg.checkpoint_dir, k_cur, levels, sups,
                                np.asarray(carry[4]), np.asarray(carry[5]),
                                M_run,
@@ -905,6 +1041,8 @@ class Mirage:
 
         levels, sups, rows = self._decode_device_run(
             rw, levels0, supports0, start_k)
+        if self.auditor is not None:
+            self.auditor.check_levels(levels, sups)
         tovf = total_overflow + rw.total_overflow
         elapsed = time.perf_counter() - t0
         per = elapsed / max(len(rows), 1)
@@ -938,7 +1076,9 @@ class Mirage:
                            cand_rate: Optional[float] = None,
                            spec_window: Optional[float] = None,
                            packed: bool = False,
-                           tile_c: Optional[int] = None
+                           tile_c: Optional[int] = None,
+                           psup: Optional[np.ndarray] = None,
+                           n_graphs: int = -1
                            ) -> _LevelOutcome:
         """One level through the device-resident program: a single
         dispatch and a single device→host sync on the wire vector.
@@ -987,7 +1127,11 @@ class Mirage:
             child_width=child_width,
             sched_floor=bk.c_floor if bk is not None else None,
             level=level, sharded=self._sharded_wire(),
-            packed=packed, tile_c=tile_c)
+            packed=packed, tile_c=tile_c,
+            psup=psup, n_graphs=n_graphs)
+        # chaos hook: an injected stall while the program is in flight —
+        # the watchdog's armed phase deadline is what bounds it
+        faults.maybe_hang("dispatch", level, self._watchdog)
         # the overlap window: the device program is in flight, the host
         # is free — speculate the next level's candidates now
         spec_cands = None
@@ -1056,11 +1200,12 @@ class Mirage:
             perm=w.perm if (w.rebalanced and n > 0) else None,
             map_seconds=map_secs, escalations=escalations,
             retried=retried, survivor_cap=S, spec_cands=spec_cands,
-            candgen_seconds=cand_secs)
+            candgen_seconds=cand_secs, audit=int(w.audit))
 
     # ------------------------------------------------------------------
     def _level_legacy(self, meta_p, meta, C, pol, pmask, src, dst, emask,
-                      minsup, M, n_parts) -> _LevelOutcome:
+                      minsup, M, n_parts, *,
+                      level: Optional[int] = None) -> _LevelOutcome:
         """The PR-1 driver: separate support and materialize programs
         with host round-trips between them (keep list, escalation loop,
         LPT detour).  Kept as differential oracle + benchmark baseline."""
@@ -1069,6 +1214,7 @@ class Mirage:
         gsup, verdict, emb_pp = map_reduce_supports(
             self.mesh, meta_p, pol, pmask, src, dst, emask,
             minsup=minsup, backend=cfg.backend, reduce=cfg.reduce)
+        faults.maybe_hang("dispatch", level, self._watchdog)
         map_secs = time.perf_counter() - t_map
 
         keep = np.flatnonzero(verdict[:C] != 0)
@@ -1153,7 +1299,13 @@ class Mirage:
             "max_embeddings": M,
             "total_overflow": overflow,
         }
-        ckpt.save_step(root, level, state, metadata={"kind": "mirage-mining"})
+        # metadata the supervisor's partial-result cut branches on:
+        # "audited" marks steps written by an auditing run (the only
+        # levels a PartialResult may ever cut at), minsup + n_graphs
+        # parameterize the load-time re-audit
+        ckpt.save_step(root, level, state,
+                       metadata={"kind": "mirage-mining",
+                                 **self._ckpt_meta})
 
 
 def _pad_store(pol, pmask, *, p_to: Optional[int] = None,

@@ -2,11 +2,23 @@
 
     python -m repro.launch.mine --dataset pubchem-like --n-graphs 200 \
         --minsup 0.2 --partitions 8 --scheme 2 --reduce reduce_scatter
+
+Anytime mining (DESIGN.md §14): ``--deadline S`` bounds the whole run's
+wall clock and ``--partial-ok`` turns budget/deadline exhaustion into a
+verified PARTIAL RESULT (the frequent set through the newest audited
+complete level) printed with a ``[mine] PARTIAL RESULT`` marker and
+exit code 0 — the JSON written by ``--out`` then carries
+``"partial": true``.  ``--level-deadline S`` pins a fixed per-phase
+watchdog deadline (deterministic hang detection for CI chaos runs);
+``--audit-report PATH`` dumps the continuous invariant auditor's
+per-level report.  A malformed input database exits 2 with a one-line
+diagnosis (graph id + edge index) instead of a traceback.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 
@@ -85,14 +97,32 @@ def main() -> None:
     ap.add_argument("--max-retries", type=int, default=5,
                     help="supervisor recovery-attempt budget")
     ap.add_argument("--fault-log", default=None,
-                    help="write the structured fault-event log (JSON) "
-                         "here; implies supervised mining")
+                    help="write the structured fault-event log (JSONL, "
+                         "one line per event, crash-safe) here; implies "
+                         "supervised mining")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="whole-run wall-clock budget in seconds; "
+                         "implies supervised mining (DESIGN.md §14)")
+    ap.add_argument("--level-deadline", type=float, default=None,
+                    help="fixed per-phase watchdog deadline in seconds "
+                         "(default: self-calibrating EWMA policy)")
+    ap.add_argument("--partial-ok", action="store_true",
+                    help="on deadline/retry-budget exhaustion return a "
+                         "verified PARTIAL RESULT (exit 0 + marker) "
+                         "instead of raising; implies supervised mining")
+    ap.add_argument("--no-audit", action="store_true",
+                    help="disable the continuous invariant auditor "
+                         "(device audit word + host spot checks)")
+    ap.add_argument("--audit-report", default=None,
+                    help="write the auditor's per-level report JSON here")
     args = ap.parse_args()
 
-    from repro.core.graphdb import paper_toy_db, pubchem_like_db, random_db
-    from repro.core.mining import Mirage, MirageConfig
+    from repro.core.graphdb import (GraphValidationError, paper_toy_db,
+                                    pubchem_like_db, random_db)
+    from repro.core.mining import Mirage, MirageConfig, PartialResult
     from repro.core.supervisor import MiningSupervisor, SupervisorConfig
     from repro.runtime import faults
+    from repro.runtime.watchdog import Watchdog
 
     if args.dataset == "paper-toy":
         graphs = paper_toy_db()
@@ -122,56 +152,101 @@ def main() -> None:
         device_loop_ckpt_every=args.ckpt_every,
         device_loop_unroll=args.unroll,
         checkpoint_dir=args.ckpt_dir,
-        bucket_shapes=not args.no_bucket, **bucket_kw)
+        bucket_shapes=not args.no_bucket,
+        audit=not args.no_audit, **bucket_kw)
 
-    supervised = args.fault_schedule or args.fault_log
+    supervised = (args.fault_schedule or args.fault_log
+                  or args.deadline is not None or args.partial_ok)
     if args.fault_schedule:
         schedule = faults.FaultSchedule.parse(args.fault_schedule)
         faults.install(schedule)
         print(f"[mine] chaos schedule: {schedule.describe()}")
 
+    sup = miner = None
     t0 = time.perf_counter()
-    if supervised:
-        sup = MiningSupervisor(
-            cfg, SupervisorConfig(max_retries=args.max_retries,
-                                  fault_log_path=args.fault_log))
-        res = sup.mine(graphs, resume=args.resume)
-    else:
-        miner = Mirage(cfg)
-        res = miner.fit(graphs, resume=args.resume)
-        if miner.last_device_loop is not None:
-            info = miner.last_device_loop
-            print(f"[mine] device_loop: completed={info['completed']} "
-                  f"chunks={info['chunks']} "
-                  f"escalations={info['escalations']}"
-                  + (f" fallback={info['fallback']}"
-                     if info["fallback"] else ""))
+    try:
+        if supervised:
+            watchdog = None
+            if args.level_deadline is not None:
+                watchdog = Watchdog(run_deadline_s=args.deadline,
+                                    phase_default=args.level_deadline)
+            sup = MiningSupervisor(
+                cfg, SupervisorConfig(
+                    max_retries=args.max_retries,
+                    fault_log_path=args.fault_log,
+                    deadline_s=args.deadline,
+                    on_exhausted="partial" if args.partial_ok
+                    else "raise"),
+                watchdog=watchdog)
+            res = sup.mine(graphs, resume=args.resume)
+        else:
+            miner = Mirage(cfg)
+            res = miner.fit(graphs, resume=args.resume)
+            if miner.last_device_loop is not None:
+                info = miner.last_device_loop
+                print(f"[mine] device_loop: completed={info['completed']} "
+                      f"chunks={info['chunks']} "
+                      f"escalations={info['escalations']}"
+                      + (f" fallback={info['fallback']}"
+                         if info["fallback"] else ""))
+    except GraphValidationError as exc:
+        # a malformed database is an input bug, not a crash: diagnose
+        # (graph id + edge index) on stderr, no traceback
+        print(f"[mine] invalid database: {exc}", file=sys.stderr)
+        raise SystemExit(2)
     dt = time.perf_counter() - t0
 
-    if supervised and sup.events:
+    if sup is not None and sup.events:
         print(f"[mine] recovered from {len(sup.events)} fault(s):")
         for ev in sup.events:
             print(f"  attempt {ev.attempt}: {ev.kind} at level "
                   f"{ev.level} -> {ev.action} ({ev.detail})")
+    if sup is not None and sup.watchdog and sup.watchdog.trips:
+        for trip in sup.watchdog.trips:
+            print(f"[mine] watchdog trip: level {trip['level']} "
+                  f"exceeded {trip['deadline_s']:.2f}s phase deadline "
+                  f"after {trip['elapsed_s']:.2f}s")
+
+    partial = isinstance(res, PartialResult)
+    if partial:
+        print(f"[mine] PARTIAL RESULT ({res.reason}): verified prefix "
+              f"through level {res.last_level}, audited={res.audited}")
     print(f"[mine] |G|={len(graphs)} minsup={res.minsup} "
           f"partitions={args.partitions} scheme={args.scheme} "
           f"reduce={cfg.reduce}")
     print(f"[mine] frequent patterns: {sum(res.counts())} "
           f"(per level: {res.counts()})")
-    print(f"[mine] wall: {dt:.2f}s  overflow: {res.total_overflow}")
-    for st in res.stats:
-        print(f"  level {st.level}: candidates={st.n_candidates} "
-              f"frequent={st.n_frequent} {st.seconds:.2f}s "
-              f"(map {st.map_seconds:.2f}s) imbalance={st.imbalance:.2f}"
-              f"{' [rebalanced]' if st.rebalanced else ''}")
+    if partial:
+        print(f"[mine] wall: {dt:.2f}s")
+    else:
+        print(f"[mine] wall: {dt:.2f}s  overflow: {res.total_overflow}")
+        for st in res.stats:
+            print(f"  level {st.level}: candidates={st.n_candidates} "
+                  f"frequent={st.n_frequent} {st.seconds:.2f}s "
+                  f"(map {st.map_seconds:.2f}s) "
+                  f"imbalance={st.imbalance:.2f}"
+                  f"{' [rebalanced]' if st.rebalanced else ''}")
+    if args.audit_report:
+        report = (sup.audit_report if sup is not None
+                  else (miner.auditor.report if miner and miner.auditor
+                        else []))
+        with open(args.audit_report, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"[mine] audit report ({len(report)} row(s)) -> "
+              f"{args.audit_report}")
     if args.out:
+        payload = {
+            "n_graphs": len(graphs), "minsup": res.minsup,
+            "counts": res.counts(), "seconds": dt,
+            "levels": [[list(map(list, c)) for c in lvl]
+                       for lvl in res.levels],
+        }
+        if partial:
+            payload.update(partial=True, reason=res.reason,
+                           last_level=res.last_level,
+                           audited=res.audited)
         with open(args.out, "w") as f:
-            json.dump({
-                "n_graphs": len(graphs), "minsup": res.minsup,
-                "counts": res.counts(), "seconds": dt,
-                "levels": [[list(map(list, c)) for c in lvl]
-                           for lvl in res.levels],
-            }, f)
+            json.dump(payload, f)
 
 
 if __name__ == "__main__":

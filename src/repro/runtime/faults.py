@@ -31,23 +31,25 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import os
+import time
 from typing import Iterable, Optional
 
 import numpy as np
 
 __all__ = [
     "KINDS",
-    "InjectedFault", "WorkerLost", "KernelFault",
+    "InjectedFault", "WorkerLost", "KernelFault", "HangTimeout",
     "IntegrityError", "WireIntegrityError", "CheckpointIntegrityError",
+    "AuditError", "DeadlineExceeded",
     "FaultSpec", "FaultSchedule",
     "install", "clear", "active", "installed",
     "injection_log", "reset_log",
-    "maybe_raise", "corrupt_wire", "override_cap", "corrupt_checkpoint",
-    "damage_checkpoint",
+    "maybe_raise", "maybe_hang", "corrupt_wire", "override_cap",
+    "corrupt_checkpoint", "damage_checkpoint",
 ]
 
 KINDS = ("worker_loss", "kernel_fault", "wire_bitflip", "ckpt_corrupt",
-         "cap_storm")
+         "cap_storm", "hang")
 
 _CKPT_MODES = ("flip", "truncate", "manifest")
 
@@ -87,6 +89,41 @@ class KernelFault(InjectedFault):
     kind = "kernel_fault"
 
 
+class HangTimeout(RuntimeError):
+    """A stalled device phase crossed its watchdog deadline.  Raised
+    from the cooperative hang hook (:func:`maybe_hang`) when an injected
+    stall is caught by an armed :class:`~repro.runtime.watchdog.Watchdog`
+    — the detection path a real hang would take if the dispatch ever
+    returned.  ``waited_s`` is the observed detection latency."""
+
+    kind = "hang"
+
+    def __init__(self, level: int, waited_s: float = 0.0):
+        self.level = level
+        self.waited_s = waited_s
+        super().__init__(
+            f"stalled device phase at level {level} "
+            f"(watchdog tripped after {waited_s:.2f}s)")
+
+
+class DeadlineExceeded(RuntimeError):
+    """The whole-run deadline passed.  Not a retryable fault: the
+    supervisor routes it straight to the partial-result path (or
+    re-raises under ``on_exhausted='raise'``)."""
+
+    kind = "deadline"
+
+    def __init__(self, level: Optional[int], elapsed_s: float,
+                 deadline_s: float):
+        self.level = level
+        self.elapsed_s = elapsed_s
+        self.deadline_s = deadline_s
+        at = f" at level {level}" if level is not None else ""
+        super().__init__(
+            f"run deadline {deadline_s:.2f}s exceeded{at} "
+            f"(elapsed {elapsed_s:.2f}s)")
+
+
 class IntegrityError(RuntimeError):
     """Base for *detected* state corruption (checksums, digests)."""
 
@@ -99,6 +136,18 @@ class CheckpointIntegrityError(IntegrityError):
     """A checkpoint failed its manifest digests (or cannot be read)."""
 
 
+class AuditError(IntegrityError):
+    """The continuous invariant auditor caught a violated mining
+    invariant (support monotonicity, downward closure, canonicality,
+    verdict consistency).  State-class: the mined state can no longer be
+    trusted, so the supervisor heals by checkpoint replay."""
+
+    def __init__(self, level: int, detail: str):
+        self.level = level
+        self.detail = detail
+        super().__init__(f"audit failure at level {level}: {detail}")
+
+
 # ---------------------------------------------------------------------------
 # schedule
 # ---------------------------------------------------------------------------
@@ -109,7 +158,9 @@ class FaultSpec:
     ``times`` consecutive matches.  Extra knobs are per-kind: ``worker``
     (worker_loss), ``word``/``bit`` (wire_bitflip; word -1 = middle of
     the wire), ``mode`` (ckpt_corrupt: flip|truncate|manifest), ``cap``
-    (cap_storm's forced survivor cap)."""
+    (cap_storm's forced survivor cap), ``secs`` (hang: how long the
+    stall lasts before clearing on its own when no watchdog catches
+    it)."""
 
     kind: str
     level: int
@@ -119,6 +170,7 @@ class FaultSpec:
     bit: int = 7
     mode: str = "flip"
     cap: int = 1
+    secs: float = 1.0
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -145,9 +197,14 @@ class FaultSpec:
                     "times": int(times) if times else 1}
         for item in filter(None, (o.strip() for o in opts.split(","))):
             key, _, val = item.partition("=")
-            if key not in ("worker", "word", "bit", "mode", "cap"):
+            if key not in ("worker", "word", "bit", "mode", "cap", "secs"):
                 raise ValueError(f"unknown fault option {key!r} in {text!r}")
-            kw[key] = val if key == "mode" else int(val)
+            if key == "mode":
+                kw[key] = val
+            elif key == "secs":
+                kw[key] = float(val)
+            else:
+                kw[key] = int(val)
         return FaultSpec(**kw)
 
 
@@ -183,6 +240,7 @@ class FaultSchedule:
                 bit=int(rng.integers(0, 30)),
                 mode=_CKPT_MODES[int(rng.integers(len(_CKPT_MODES)))],
                 cap=1,
+                secs=0.05,       # unwatched stalls self-clear fast
             ))
         return cls(specs)
 
@@ -271,6 +329,29 @@ def maybe_raise(point: str, level: Optional[int]) -> None:
         spec = _take("kernel_fault", level)
         if spec is not None:
             raise KernelFault(level, "injected dispatch failure")
+
+
+def maybe_hang(point: str, level: Optional[int], watchdog=None) -> None:
+    """Simulate a stalled device phase at (point, level), if scheduled.
+
+    The stall blocks in small slices polling the watchdog.  When an
+    armed watchdog trips (phase deadline or run deadline), the stall is
+    *detected*: :class:`HangTimeout` carries the observed latency.  With
+    no watchdog (or one that never trips) the stall clears on its own
+    after ``spec.secs`` — a transient slowdown the run rides out.
+    """
+    spec = _take("hang", level)
+    if spec is None:
+        return
+    t0 = time.monotonic()
+    while True:
+        waited = time.monotonic() - t0
+        if watchdog is not None and (watchdog.tripped
+                                     or watchdog.run_expired):
+            raise HangTimeout(level, waited)
+        if waited >= spec.secs:
+            return                        # stall cleared below deadline
+        time.sleep(min(0.005, max(0.0, spec.secs - waited)))
 
 
 def corrupt_wire(wire: np.ndarray, level: Optional[int]) -> np.ndarray:

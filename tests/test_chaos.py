@@ -19,10 +19,11 @@ import pytest
 
 from repro.core.graphdb import random_db
 from repro.core.host_miner import mine_host
-from repro.core.mining import Mirage, MirageConfig
+from repro.core.mining import Mirage, MirageConfig, PartialResult
 from repro.core.supervisor import MiningSupervisor, SupervisorConfig
 from repro.runtime import checkpoint as ckpt
 from repro.runtime import faults
+from repro.runtime.watchdog import Watchdog
 
 # Deterministic 4-level DB with multiple survivors at every level
 # (levels: 3, 5, 10, 5 frequent patterns) — deep enough to place faults
@@ -54,14 +55,31 @@ def assert_parity(res):
         assert sup == REF.frequent[code].support
 
 
+def assert_verified_prefix(res):
+    """The anytime contract (§14): a PartialResult must be a VERIFIED
+    prefix of the fault-free host oracle — every level it does report
+    is bit-identical, supports included."""
+    assert isinstance(res, PartialResult)
+    assert not res.complete
+    n = len(res.levels)
+    assert n <= len(REF.levels)
+    assert [set(map(tuple, l)) for l in res.levels] == \
+        [set(l) for l in REF.levels[:n]]
+    for code, sup_ in res.supports.items():
+        assert sup_ == REF.frequent[tuple(code)].support
+
+
 def _supervised(schedule_text, *, ckpt_dir=None, max_retries=8,
-                degrade_after=2, **cfg_kw):
+                degrade_after=2, watchdog=None, on_exhausted="raise",
+                **cfg_kw):
     faults.install(faults.FaultSchedule.parse(schedule_text))
     sup = MiningSupervisor(
         _cfg(checkpoint_dir=ckpt_dir, **cfg_kw),
         SupervisorConfig(max_retries=max_retries,
                          degrade_after=degrade_after,
-                         sleep_fn=lambda s: None))
+                         on_exhausted=on_exhausted,
+                         sleep_fn=lambda s: None),
+        watchdog=watchdog)
     return sup.mine(DB), sup
 
 
@@ -258,6 +276,121 @@ if _HAVE_HYPOTHESIS:
 
 
 # ---------------------------------------------------------------------------
+# device_loop fault matrix (§14): the whole-run pipeline under the same
+# fault kinds, pinned to the oracle through the device_loop→single_sync
+# supervisor rung
+# ---------------------------------------------------------------------------
+
+def _dl(**kw):
+    kw.setdefault("pipeline", "device_loop")
+    kw.setdefault("device_loop_ckpt_every", 1)
+    return kw
+
+
+def test_device_loop_run_wire_bitflip_storm_retries(tmp_path):
+    """Corruption on all 3 fetch attempts of one chunk's run wire
+    surfaces as a transient fault; the supervisor's retry resumes from
+    the chunk-boundary checkpoint and ends bit-identical."""
+    res, sup = _supervised("wire_bitflip@3*3",
+                           ckpt_dir=str(tmp_path / "ck"), **_dl())
+    assert_parity(res)
+    assert [e.kind for e in sup.events] == ["transient"]
+    assert len(faults.injection_log()) == 3
+
+
+def test_device_loop_kernel_fault_descends_to_single_sync(tmp_path):
+    """Repeated kernel faults inside the run window walk the EXTRA
+    device-loop rung first: abandon the whole-run loop for the
+    per-level single-sync program."""
+    res, sup = _supervised("kernel_fault@3*2",
+                           ckpt_dir=str(tmp_path / "ck"), **_dl())
+    assert_parity(res)
+    assert sup.rung == 1                        # single_sync rung
+    assert [(e.kind, e.action) for e in sup.events] == [
+        ("kernel", "retry"), ("kernel", "degrade")]
+    assert "single_sync" in sup.events[-1].detail
+
+
+def test_device_loop_stalled_chunk_degrades_to_single_sync(tmp_path):
+    """An injected mid-chunk stall trips the armed phase deadline; the
+    hang forfeits the whole-run loop for the per-level program, which
+    bounds any future stall to one level — and stays exact."""
+    res, sup = _supervised(
+        "hang@3:secs=999", ckpt_dir=str(tmp_path / "ck"),
+        watchdog=Watchdog(phase_default=2.0), **_dl())
+    assert_parity(res)
+    assert sup.rung >= 1
+    assert [(e.kind, e.action) for e in sup.events] == [
+        ("hang", "degrade")]
+    assert sup.watchdog.trips                   # detection was the trip
+
+
+def test_single_sync_hang_replays_from_checkpoint(tmp_path):
+    """The per-level pipeline heals a stalled dispatch by ordinary
+    checkpoint replay — no ladder descent needed."""
+    res, sup = _supervised("hang@3:secs=999",
+                           ckpt_dir=str(tmp_path / "ck"),
+                           watchdog=Watchdog(phase_default=2.0))
+    assert_parity(res)
+    assert sup.rung == 0
+    assert [(e.kind, e.action) for e in sup.events] == [
+        ("hang", "retry")]
+    # the successful attempt resumed from the level-2 checkpoint
+    assert res.stats[0].level == 3
+
+
+# ---------------------------------------------------------------------------
+# anytime partial results (§14): every exhaustion path must terminate
+# as a VERIFIED prefix of the oracle
+# ---------------------------------------------------------------------------
+
+def test_deadline_cuts_partial_at_newest_audited_checkpoint(tmp_path):
+    root = str(tmp_path / "ck")
+    Mirage(_cfg(checkpoint_dir=root)).fit(DB)   # audited checkpoints 2..4
+    sup = MiningSupervisor(
+        _cfg(checkpoint_dir=root),
+        SupervisorConfig(on_exhausted="partial", sleep_fn=lambda s: None))
+    res = sup.mine(DB, deadline_s=1e-6)
+    assert_verified_prefix(res)
+    assert res.reason == "deadline" and res.audited
+    assert res.last_level == 4 and len(res.levels) == 4
+    assert [e.kind for e in sup.events] == ["deadline"]
+
+
+def test_budget_exhaustion_returns_audited_prefix(tmp_path):
+    """A permanent fault at level 4 burns the whole retry budget; the
+    partial cut lands on the level-3 checkpoint — a 3-level verified
+    prefix, not an exception."""
+    res, sup = _supervised("worker_loss@4*99",
+                           ckpt_dir=str(tmp_path / "ck"),
+                           max_retries=2, on_exhausted="partial")
+    assert_verified_prefix(res)
+    assert res.reason == "budget-exhausted" and res.audited
+    assert res.last_level == 3 and len(res.levels) == 3
+    assert sup.events[-1].action == "partial"
+    assert res.events                           # the event trail rides along
+
+
+def test_budget_exhaustion_without_checkpoints_is_empty_prefix():
+    """No checkpoints to cut at → the (trivially valid) empty prefix,
+    clearly marked unaudited."""
+    res, _ = _supervised("worker_loss@2*99", max_retries=1,
+                         on_exhausted="partial")
+    assert_verified_prefix(res)
+    assert res.levels == [] and res.last_level == 0
+    assert not res.audited
+
+
+def test_deadline_exhaustion_raises_by_default(tmp_path):
+    root = str(tmp_path / "ck")
+    Mirage(_cfg(checkpoint_dir=root)).fit(DB)
+    sup = MiningSupervisor(_cfg(checkpoint_dir=root),
+                           SupervisorConfig(sleep_fn=lambda s: None))
+    with pytest.raises(faults.DeadlineExceeded):
+        sup.mine(DB, deadline_s=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # multi-worker elastic shrink (subprocess: forces 2 CPU devices)
 # ---------------------------------------------------------------------------
 
@@ -310,3 +443,45 @@ def _run_snippet(snippet, *argv, timeout=900):
 
 def test_worker_loss_on_two_workers_shrinks_to_one(tmp_path):
     assert "SHRINK-OK" in _run_snippet(SHRINK_SNIPPET, tmp_path / "ck")
+
+
+DL_SHRINK_SNIPPET = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax
+    from repro.core.graphdb import random_db
+    from repro.core.host_miner import mine_host
+    from repro.core.mapreduce import MiningMesh
+    from repro.core.mining import MirageConfig
+    from repro.core.supervisor import MiningSupervisor, SupervisorConfig
+    from repro.runtime import faults, jax_compat
+
+    ck = sys.argv[1]
+    graphs = random_db(10, seed=5, n_vertices=9, n_vlabels=2, n_elabels=1)
+    ref = mine_host(graphs, 5, max_size=5)
+
+    faults.install(faults.FaultSchedule.parse("worker_loss@3"))
+    mesh2 = MiningMesh(jax_compat.make_mesh((2,), ("w",)))
+    sup = MiningSupervisor(
+        MirageConfig(minsup=5, n_partitions=4, max_size=5,
+                     pipeline="device_loop", device_loop_ckpt_every=1,
+                     checkpoint_dir=ck),
+        SupervisorConfig(sleep_fn=lambda s: None),
+        mesh=mesh2)
+    res = sup.mine(graphs)
+
+    assert [e.action for e in sup.events] == ["shrink"], sup.events
+    assert "1 worker" in sup.events[0].detail
+    assert [set(l) for l in res.levels] == [set(l) for l in ref.levels]
+    for code, sup_ in res.supports.items():
+        assert sup_ == ref.frequent[code].support
+    print("DL-SHRINK-OK")
+""")
+
+
+def test_device_loop_worker_loss_on_two_workers_shrinks(tmp_path):
+    """The whole-run pipeline under worker loss at W=2: the supervisor
+    shrinks the mesh and the resumed device loop still matches the
+    oracle bit for bit."""
+    assert "DL-SHRINK-OK" in _run_snippet(DL_SHRINK_SNIPPET,
+                                          tmp_path / "ck")

@@ -298,6 +298,8 @@ def test_classify_maps_taxonomy_to_recovery_classes():
     assert sup_mod.classify(faults.KernelFault(3)) == "kernel"
     assert sup_mod.classify(faults.WireIntegrityError("x")) == "transient"
     assert sup_mod.classify(faults.CheckpointIntegrityError("x")) == "state"
+    assert sup_mod.classify(faults.HangTimeout(3, 0.5)) == "hang"
+    assert sup_mod.classify(faults.AuditError(2, "bad word")) == "state"
     assert sup_mod.classify(ValueError("real bug")) is None
 
 
@@ -323,8 +325,13 @@ def test_supervisor_reraises_fatal_and_exhausted_budget(tmp_path):
             sup.mine(paper_toy_db())
     assert [e.action for e in sup.events][-1] == "give_up"
     assert len([e for e in sup.events if e.action != "give_up"]) == 2
-    data = json.loads(log.read_text())
-    assert len(data["events"]) == len(sup.events)
+    # crash-safe JSONL: one line per event the moment it happened,
+    # plus the end-of-run summary line
+    lines = [json.loads(l) for l in log.read_text().splitlines()]
+    events = [l for l in lines if "summary" not in l]
+    assert len(events) == len(sup.events)
+    assert lines[-1]["summary"]["outcome"] == "exhausted"
+    assert lines[-1]["summary"]["by_kind"] == {"worker_loss": 2}
 
 
 def test_supervisor_passes_fatal_through():

@@ -48,11 +48,11 @@ def _run_snippet(snippet, *argv, timeout=900):
 
 def _make_wire(cp, n_partitions, n_shards, *, seed=0):
     """Synthesize a packed wire exactly as the level program emits it:
-    per-shard [gsup slice | 4 scalars | perm | checksum], with the
+    per-shard [gsup slice | 5 scalars | perm | checksum], with the
     scalar words and permutation replicated across shards."""
     rng = np.random.default_rng(seed)
     gsup = rng.integers(0, 100, cp).astype(np.int32)
-    scalars = np.array([7, 0, 1, 1 << 15], np.int32)
+    scalars = np.array([7, 0, 1, 1 << 15, 0], np.int32)
     perm = np.arange(n_partitions, dtype=np.int32)[::-1].copy()
     shards = []
     for s in np.split(gsup, n_shards):

@@ -235,7 +235,7 @@ def _pack_gsup_host(gsup):
 def _make_packed_wire(cp, n_partitions, n_shards, *, seed=0):
     rng = np.random.default_rng(seed)
     gsup = rng.integers(0, 1 << 16, cp).astype(np.int32)
-    scalars = np.array([7, 0, 1, 1 << 15], np.int32)
+    scalars = np.array([7, 0, 1, 1 << 15, 0], np.int32)
     perm = np.arange(n_partitions, dtype=np.int32)[::-1].copy()
     shards = []
     for s in np.split(gsup, n_shards):
